@@ -1,0 +1,108 @@
+"""End-to-end driver: train a ~100M-param CosmoFlow variant for a few
+hundred steps on synthetic full-resolution cosmology volumes, with the
+full substrate: spatially-parallel I/O + distributed cache, hybrid-parallel
+train step, LR schedule, eval, checkpointing.
+
+    PYTHONPATH=src python examples/train_cosmoflow.py --steps 300
+    # hybrid-parallel on 8 fake devices:
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/train_cosmoflow.py \
+            --data 2 --model 4 --steps 100
+"""
+import argparse
+import dataclasses
+import os
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.configs.base import ConvNetConfig
+from repro.data import pipeline, store, synthetic
+from repro.models import cosmoflow
+from repro.optim.adam import Adam, linear_decay
+from repro.train import checkpoint
+from repro.train.train_step import (make_convnet_eval_step,
+                                    make_convnet_train_step)
+
+
+def big_config(width: int = 64) -> ConvNetConfig:
+    """~100M-param CosmoFlow variant: wider channels + wider FC head."""
+    return ConvNetConfig(
+        name=f"cosmoflow-big-{width}", family="conv3d", arch="cosmoflow",
+        input_width=width, in_channels=1, out_dim=4,
+        conv_channels=(32, 64, 128, 256, 512), fc_dims=(2048, 256),
+        batchnorm=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--width", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--data", type=int, default=1)
+    ap.add_argument("--model", type=int, default=1)
+    ap.add_argument("--num-train", type=int, default=32)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--eval-every", type=int, default=50)
+    args = ap.parse_args()
+
+    cfg = big_config(args.width)
+    print(f"model {cfg.name}: {cfg.param_count()/1e6:.1f}M params")
+    mesh = jax.make_mesh((args.data, args.model), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+    with tempfile.TemporaryDirectory() as d:
+        n = args.num_train
+        cubes, targets = synthetic.make_cosmology_dataset(
+            n + 8, cfg.input_width, channels=1, seed=0)
+        store.write_dataset(d, cubes, targets)
+        loader = pipeline.SpatialParallelLoader(
+            store.HyperslabStore(d), mesh,
+            P("data", "model", None, None, None),
+            global_batch=args.batch, seed=0)
+
+        opt = Adam(lr=linear_decay(1e-3, args.steps), grad_clip=1.0)
+        step = make_convnet_train_step(
+            cfg, mesh, opt, spatial_axes=("model", None, None),
+            data_axes=("data",), global_batch=args.batch)
+        evalf = make_convnet_eval_step(
+            cfg, mesh, spatial_axes=("model", None, None),
+            data_axes=("data",), global_batch=8)
+        params = cosmoflow.init_params(jax.random.PRNGKey(0), cfg)
+        opt_state = opt.init(params)
+
+        xe, ye = loader.load_batch(np.arange(n, n + 8))
+        t0 = time.time()
+        order = loader.epoch_schedule()
+        pos = 0
+        for i in range(args.steps):
+            if pos + args.batch > n:
+                order, pos = loader.epoch_schedule(), 0
+                order = order[order < n]
+            ids = order[pos:pos + args.batch]
+            pos += args.batch
+            x, y = loader.load_batch(ids)
+            params, opt_state, loss = step(params, opt_state, x, y,
+                                           jnp.asarray(i, jnp.int32))
+            if i % 10 == 0:
+                dt = time.time() - t0
+                print(f"step {i:4d}  loss {float(loss):.4f}  "
+                      f"{(i+1)*args.batch/dt:.2f} samples/s  "
+                      f"pfs {loader.stats.pfs_bytes/2**20:.0f} MiB  "
+                      f"cache {loader.stats.cache_bytes_local/2**20:.0f} MiB")
+            if args.eval_every and (i + 1) % args.eval_every == 0:
+                ev_loss, _ = evalf(params, xe, ye)
+                print(f"  eval mse {float(ev_loss):.4f}")
+        if args.ckpt:
+            checkpoint.save(args.ckpt, params, step=args.steps)
+            print(f"checkpoint -> {args.ckpt}")
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

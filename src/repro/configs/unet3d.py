@@ -1,0 +1,15 @@
+"""3D U-Net (Cicek et al., MICCAI 2016) at 256^3 (paper SII-C/SV-A):
+3 encoder levels + bottleneck, base 32 channels, deconv upsampling,
+per-voxel softmax over 3 classes (LiTS liver/lesion/background)."""
+import dataclasses
+from repro.configs.base import ConvNetConfig
+
+CONFIG = ConvNetConfig(
+    name="unet3d-256", family="conv3d", arch="unet3d", input_width=256,
+    in_channels=1, out_dim=3, base_channels=32, depth=3, batchnorm=True,
+)
+
+SMOKE = ConvNetConfig(
+    name="unet3d-smoke", family="conv3d", arch="unet3d", input_width=16,
+    in_channels=1, out_dim=3, base_channels=4, depth=2, batchnorm=True,
+)

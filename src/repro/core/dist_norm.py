@@ -1,0 +1,52 @@
+"""Distributed batch normalization (paper §III-A).
+
+Per-channel statistics must be aggregated across both the sample (data)
+partitions and the spatial partitions of the mini-batch: a psum of the
+local (count, sum, sumsq) triple over every mesh axis that shards N/D/H/W.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def distributed_batchnorm(
+    x: jax.Array,
+    scale: jax.Array,
+    bias: jax.Array,
+    reduce_axes: Sequence[str],
+    eps: float = 1e-5,
+    use_pallas: bool = False,
+) -> jax.Array:
+    """BatchNorm over all dims but the channel (last) dim of a local shard,
+    psum-reducing statistics over ``reduce_axes`` mesh axes."""
+    reduce_dims = tuple(range(x.ndim - 1))
+    n_local = 1
+    for d in reduce_dims:
+        n_local *= x.shape[d]
+    s = jnp.sum(x, axis=reduce_dims)
+    ss = jnp.sum(jnp.square(x), axis=reduce_dims)
+    n = jnp.asarray(n_local, dtype=x.dtype)
+    for ax in reduce_axes:
+        s = lax.psum(s, ax)
+        ss = lax.psum(ss, ax)
+        n = lax.psum(n, ax)
+    mean = s / n
+    var = jnp.maximum(ss / n - jnp.square(mean), 0.0)
+    if use_pallas:
+        from repro.kernels.bn_act import ops as bn_ops
+
+        return bn_ops.bn_leaky_relu(x, mean, var, scale, bias, eps=eps,
+                                    negative_slope=1.0)  # slope 1 = identity act
+    inv = lax.rsqrt(var + eps)
+    return (x - mean) * (inv * scale) + bias
+
+
+def distributed_mean(x: jax.Array, reduce_axes: Sequence[str]) -> jax.Array:
+    """Mean of a scalar/vector over mesh axes (loss aggregation)."""
+    for ax in reduce_axes:
+        x = lax.pmean(x, ax)
+    return x

@@ -1,0 +1,49 @@
+"""Process-wide lowering flags.
+
+* ``scan_unroll``: fully unroll the over-layers ``lax.scan``. The dry-run
+  enables this because XLA's ``cost_analysis`` counts a while-loop body
+  ONCE (not x trip-count), which would silently under-report FLOPs/bytes in
+  the roofline. Runtime training keeps the rolled loop (smaller programs).
+* ``remat``: wrap each layer body in ``jax.checkpoint`` (recompute
+  activations in backward) — the standard memory/compute trade; without it
+  the 4k-train shapes hold every layer's activations live.
+"""
+from __future__ import annotations
+
+import contextlib
+
+_STATE = {"scan_unroll": False, "remat": False,
+          "ep_alltoall": True, "seq_shard_acts": False,
+          "tp_shardmap_attn": False}
+
+
+def get(name: str) -> bool:
+    return _STATE[name]
+
+
+def set_flags(**kw) -> None:
+    for k, v in kw.items():
+        if k not in _STATE:
+            raise KeyError(k)
+        _STATE[k] = v
+
+
+@contextlib.contextmanager
+def flags(**kw):
+    old = dict(_STATE)
+    set_flags(**kw)
+    try:
+        yield
+    finally:
+        _STATE.update(old)
+
+
+def scan_kwargs(length: int) -> dict:
+    return {"unroll": length} if _STATE["scan_unroll"] else {}
+
+
+def maybe_remat(fn):
+    return jax.checkpoint(fn) if _STATE["remat"] else fn
+
+
+import jax  # noqa: E402  (bottom import keeps module import cheap)

@@ -1,0 +1,113 @@
+"""Halo exchange for spatially-partitioned tensors (paper §III-A).
+
+All functions here run *inside* ``jax.shard_map``: they see the local shard
+of a spatially-partitioned activation tensor and exchange boundary slabs
+with neighbouring shards along a named mesh axis via ``jax.lax.ppermute``
+(which lowers to ``collective-permute`` on TPU ICI — the analogue of the
+paper's P2P NVLink/InfiniBand sends).
+
+Conventions
+-----------
+* A spatial dimension of the *global* tensor is partitioned contiguously
+  over a mesh axis: shard ``i`` owns ``[i*W_loc, (i+1)*W_loc)``.
+* ``ppermute`` leaves zeros in unpaired destinations, which is exactly the
+  zero-padding needed at the global boundary for SAME convolutions, so the
+  global-boundary case needs no special handling.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def _shift_perm(n: int, direction: int):
+    """Pairs (src, dst) shifting data by ``direction`` (+1: to next rank)."""
+    if direction > 0:
+        return [(i, i + 1) for i in range(n - 1)]
+    return [(i + 1, i) for i in range(n - 1)]
+
+
+def halo_exchange(
+    x: jax.Array,
+    axis_name: str,
+    dim: int,
+    lo: int,
+    hi: int,
+    wrap: bool = False,
+) -> jax.Array:
+    """Pad local shard ``x`` along ``dim`` with neighbour boundary slabs.
+
+    ``lo`` rows are received from the previous rank (its trailing slab) and
+    ``hi`` rows from the next rank (its leading slab). Returns the padded
+    local block of size ``W_loc + lo + hi`` along ``dim``. Ranks at the
+    global boundary receive zeros (SAME-conv semantics) unless ``wrap``.
+    """
+    if lo == 0 and hi == 0:
+        return x
+    n = lax.axis_size(axis_name)
+    parts = []
+    if lo > 0:
+        if n == 1:
+            recv_lo = (
+                lax.slice_in_dim(x, x.shape[dim] - lo, x.shape[dim], axis=dim)
+                if wrap else jnp.zeros_like(lax.slice_in_dim(x, 0, lo, axis=dim))
+            )
+        else:
+            send = lax.slice_in_dim(x, x.shape[dim] - lo, x.shape[dim], axis=dim)
+            perm = _shift_perm(n, +1)
+            if wrap:
+                perm = perm + [(n - 1, 0)]
+            recv_lo = lax.ppermute(send, axis_name, perm)
+        parts.append(recv_lo)
+    parts.append(x)
+    if hi > 0:
+        if n == 1:
+            recv_hi = (
+                lax.slice_in_dim(x, 0, hi, axis=dim)
+                if wrap else jnp.zeros_like(lax.slice_in_dim(x, 0, hi, axis=dim))
+            )
+        else:
+            send = lax.slice_in_dim(x, 0, hi, axis=dim)
+            perm = _shift_perm(n, -1)
+            if wrap:
+                perm = perm + [(0, n - 1)]
+            recv_hi = lax.ppermute(send, axis_name, perm)
+        parts.append(recv_hi)
+    return jnp.concatenate(parts, axis=dim)
+
+
+def conv_halo_widths(kernel: int, stride: int) -> Tuple[int, int]:
+    """Halo widths (lo, hi) for a SAME conv with ``kernel``/``stride``.
+
+    Assumes the global width and every local shard width are divisible by
+    ``stride``. Matches XLA SAME padding: total = kernel - stride (k >= s),
+    lo = total // 2, hi = total - lo.
+    """
+    total = max(kernel - stride, 0)
+    lo = total // 2
+    return lo, total - lo
+
+
+def exchange_carry_right(
+    carry: jax.Array, axis_name: str
+) -> jax.Array:
+    """Pass a per-shard carry to the *next* rank (rank 0 receives zeros).
+
+    Used by the sequence-parallel SSD scan: the SSM state at the end of
+    shard ``i`` is the initial state of shard ``i+1`` — a 1-element halo.
+    """
+    n = lax.axis_size(axis_name)
+    if n == 1:
+        return jnp.zeros_like(carry)
+    return lax.ppermute(carry, axis_name, _shift_perm(n, +1))
+
+
+def all_gather_dim(x: jax.Array, axis_name: str, dim: int) -> jax.Array:
+    """All-gather shards along ``dim`` (the degenerate 'halo = whole domain'
+    case, used for full attention over a sequence-sharded KV)."""
+    if lax.axis_size(axis_name) == 1:
+        return x
+    return lax.all_gather(x, axis_name, axis=dim, tiled=True)

@@ -1,0 +1,101 @@
+"""Parameter PartitionSpec inference by leaf name.
+
+Maps every parameter leaf of the sequence models to a PartitionSpec under
+the policy's plan:
+
+* tp: shard head dims of attention projections, d_ff of MLP weights, the
+  expert dim of MoE weights and the vocab dim of (un)embeddings over the
+  model axis — falling back to replication (+ optional FSDP over the data
+  axes) whenever a dim is not divisible by the axis size (e.g. llama3's 8
+  KV heads on a 16-way model axis stay replicated, the standard GQA
+  behaviour).
+* cp/ep: attention/MLP weights replicated (sequence is what is sharded);
+  MoE experts still sharded over model (ep); embeddings vocab-sharded.
+* fsdp: additionally shard the largest divisible dim over the data axes.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.core.sharding import ShardingPolicy
+
+
+def _divisible(n: int, by: int) -> bool:
+    return by > 0 and n % by == 0 and n >= by
+
+
+def _leaf_spec(path: str, shape: Tuple[int, ...],
+               policy: ShardingPolicy) -> P:
+    m = policy.model_axis
+    nm = policy.model_size
+    plan = policy.plan
+    spec = [None] * len(shape)
+    stacked = len(shape) > 0 and ("layers" in path or "blocks" in path
+                                  or "block_norms" in path)
+    off = 1 if stacked else 0  # leading L dim from the scan stack
+
+    def nm_ok(d):
+        return d < len(shape) and _divisible(shape[d], nm)
+
+    name = path.split("'")[-2] if "'" in path else path
+
+    if name in ("embed", "unembed") and _divisible(shape[0], nm):
+        spec[0] = m
+    elif plan == "tp":
+        if name in ("wq", "wk", "wv"):           # (L, D, H, hd)
+            if nm_ok(off + 1):
+                spec[off + 1] = m
+            elif nm_ok(off + 2):
+                spec[off + 2] = m
+        elif name in ("bq", "bk", "bv"):         # (L, H, hd)
+            if nm_ok(off):
+                spec[off] = m
+            elif nm_ok(off + 1):
+                spec[off + 1] = m
+        elif name == "wo":                        # (L, H, hd, D)
+            if nm_ok(off):
+                spec[off] = m
+            elif nm_ok(off + 1):
+                spec[off + 1] = m
+        elif name in ("w_gate", "w_up", "w_gate_r", "w_up_r"):  # (L, D, F)
+            if nm_ok(off + 1):
+                spec[off + 1] = m
+        elif name in ("w_down", "w_down_r"):      # (L, F, D)
+            if nm_ok(off):
+                spec[off] = m
+        elif name.endswith("_e"):                 # (L, E, D, F) experts
+            if nm_ok(off):
+                spec[off] = m
+        elif name == "in_proj":                   # (L, D, dproj)
+            if nm_ok(off + 1):
+                spec[off + 1] = m
+        elif name == "out_proj":                  # (L, di, D)
+            if nm_ok(off):
+                spec[off] = m
+    elif plan in ("cp", "ep"):
+        if name.endswith("_e") and plan == "ep" and nm_ok(off):
+            spec[off] = m  # experts sharded even under cp attention
+
+    # FSDP fallback over data axes for still-replicated big dims
+    if policy.fsdp and policy.mesh is not None:
+        n_data = 1
+        for a in policy.data_axes:
+            n_data *= policy.mesh.shape[a]
+        da = (policy.data_axes if len(policy.data_axes) > 1
+              else policy.data_axes[0])
+        for i in range(len(shape)):
+            if spec[i] is None and _divisible(shape[i], n_data) \
+                    and shape[i] >= 1024:
+                spec[i] = da
+                break
+    return P(*spec)
+
+
+def infer_param_specs(params: Any, policy: ShardingPolicy) -> Any:
+    """Returns a pytree of PartitionSpec matching ``params``."""
+    def fn(path, leaf):
+        return _leaf_spec(jax.tree_util.keystr(path), leaf.shape, policy)
+    return jax.tree_util.tree_map_with_path(fn, params)

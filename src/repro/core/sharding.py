@@ -1,0 +1,149 @@
+"""Logical sharding policies (GSPMD layer).
+
+Model code never names mesh axes directly; it constrains activations by
+*logical name* through a ``ShardingPolicy``. Launchers build a policy from
+the mesh + a per-architecture parallelism plan. On a 1-device CPU mesh the
+policy degenerates to no-ops so the same model code runs in tests.
+
+Axis legend (production mesh): ``pod`` (2, multi-pod only), ``data`` (16),
+``model`` (16). Parallelism plans:
+
+* ``tp``    — batch over data(+pod), heads/d_ff/vocab over model.
+* ``cp``    — batch over data(+pod), *sequence* over model (the paper's
+              spatial partitioning mapped onto the sequence axis); FFN local.
+* ``ep``    — like cp/tp for attention, experts over model (MoE).
+* conv nets use shard_map directly (core/spatial_conv.py), not this file.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# Logical activation/param names -> PartitionSpec, per plan.
+# B=batch, S=sequence, D=d_model, H=heads, F=d_ff, V=vocab, E=experts,
+# C=expert capacity, N=ssm state, P=ssm head dim.
+def _rules(plan: str, data_axes, model_axis: str) -> Dict[str, P]:
+    da = data_axes if isinstance(data_axes, tuple) else (data_axes,)
+    dspec = da if len(da) > 1 else da[0]
+    m = model_axis
+    common = {
+        "act_bsd": P(dspec, None, None),
+        "act_bsv": P(dspec, None, m),          # logits: vocab sharded
+        "kv_cache": P(dspec, None, m, None),    # (B, S, Hkv, hd) heads-sharded
+        "emb_vd": P(m, None),                   # embedding table
+        "pos": P(dspec, None),
+    }
+    if plan == "tp":
+        from repro.core import flags as _flags
+        if _flags.get("seq_shard_acts"):
+            # Megatron-style sequence parallelism for the norm/residual
+            # path: the per-layer scan carry and the fwd all-reduces become
+            # S-sharded (EXPERIMENTS.md §Perf H2). GSPMD inserts the
+            # all-gather before qkv/ffn projections and reduce-scatters
+            # after the output projections.
+            common["act_bsd"] = P(dspec, m, None)
+        common.update({
+            "act_bshd": P(dspec, None, m, None),   # per-head acts
+            "act_bsf": P(dspec, None, m),          # ffn hidden
+            "w_dhd": P(None, m, None),             # qkv proj (D, H, hd)
+            "w_hdd": P(m, None, None),             # out proj
+            "w_df": P(None, m),
+            "w_fd": P(m, None),
+            "w_edf": P(m, None, None),             # experts (E, D, F): EP
+            "w_efd": P(m, None, None),
+            "act_ecd": P(m, dspec, None),          # expert buffers
+            "ssm_state": P(dspec, m, None, None),  # (B, H, P, N) heads sharded
+            "act_bshp": P(dspec, None, m, None),   # ssd per-head
+        })
+    elif plan in ("cp", "ep"):
+        common.update({
+            "act_bsd": P(dspec, m, None),          # sequence sharded!
+            "act_bshd": P(dspec, m, None, None),
+            "act_bsf": P(dspec, m, None),
+            "act_bsv": P(dspec, m, None),
+            "kv_cache": P(dspec, m, None, None),   # cache sharded on S
+            "w_dhd": P(None, None, None),
+            "w_hdd": P(None, None, None),
+            "w_df": P(None, None),
+            "w_fd": P(None, None),
+            "w_edf": P(m, None, None),
+            "w_efd": P(m, None, None),
+            "act_ecd": P(m, dspec, None),
+            "ssm_state": P(dspec, None, None, None),
+            "act_bshp": P(dspec, m, None, None),
+        })
+    else:
+        raise ValueError(f"unknown plan {plan!r}")
+    return common
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    mesh: Optional[Mesh]
+    plan: str = "tp"
+    data_axes: Tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+    fsdp: bool = False  # additionally shard params over data axes
+
+    def rules(self) -> Dict[str, P]:
+        return _rules(self.plan, self.data_axes, self.model_axis)
+
+    @property
+    def model_size(self) -> int:
+        if self.mesh is None:
+            return 1
+        return self.mesh.shape[self.model_axis]
+
+    def spec(self, name: str) -> P:
+        return self.rules().get(name, P())
+
+    def constrain(self, x: jax.Array, name: str) -> jax.Array:
+        """Apply a with_sharding_constraint by logical name (no-op w/o mesh
+        or when a sharded dim does not divide the axis size, e.g. S=1 in
+        decode under sequence-sharded activations)."""
+        if self.mesh is None or name not in self.rules():
+            return x
+        spec = self.rules()[name]
+        if len(spec) > x.ndim:
+            return x
+        for i, s in enumerate(spec):
+            if s is None:
+                continue
+            axes = s if isinstance(s, tuple) else (s,)
+            n = 1
+            for a in axes:
+                n *= self.mesh.shape[a]
+            if x.shape[i] % n:
+                return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec)
+        )
+
+    def sharding(self, name: str) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.rules().get(name, P()))
+
+    def param_spec(self, name: str, shape: Tuple[int, ...]) -> P:
+        """Spec for a parameter by logical name, with optional FSDP over the
+        first unsharded dim that divides evenly."""
+        spec = list(self.rules().get(name, P()))
+        while len(spec) < len(shape):
+            spec.append(None)
+        if self.fsdp and self.mesh is not None:
+            n_data = 1
+            for a in self.data_axes:
+                n_data *= self.mesh.shape[a]
+            da = self.data_axes if len(self.data_axes) > 1 else self.data_axes[0]
+            for i, s in enumerate(spec):
+                if s is None and shape[i] % max(n_data, 1) == 0 and shape[i] >= n_data:
+                    spec[i] = da
+                    break
+        return P(*spec)
+
+
+NO_POLICY = ShardingPolicy(mesh=None)

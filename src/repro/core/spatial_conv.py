@@ -1,0 +1,141 @@
+"""Spatially-distributed 3D convolution / pooling / deconvolution.
+
+The paper's hybrid-parallel 3D CNN primitive: activations are laid out
+NDHWC with the **depth** dimension (optionally also H, W) partitioned over
+named mesh axes. Each op is written in "local shard + explicit halo
+exchange" style and is meant to be called inside ``jax.shard_map``.
+
+Layout: NDHWC (channel-minor — TPU-friendly; contrast with the paper's
+cuDNN NCDHW). The partitioned dims are identified by mesh-axis names in a
+``SpatialPartitioning`` descriptor.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import halo as halo_lib
+
+# Dimension indices in NDHWC.
+_SPATIAL_DIMS = (1, 2, 3)
+
+
+@dataclasses.dataclass(frozen=True)
+class SpatialPartitioning:
+    """Which mesh axes shard the D/H/W dims of NDHWC activations.
+
+    ``axes[d]`` is the mesh-axis name sharding spatial dim ``d`` (0=D, 1=H,
+    2=W) or None if that dim is unpartitioned. The paper's "8-way depth"
+    configuration is ``SpatialPartitioning(('model', None, None))``.
+    """
+
+    axes: Tuple[Optional[str], Optional[str], Optional[str]] = (None, None, None)
+
+    @property
+    def active(self) -> Sequence[Tuple[int, str]]:
+        return [(d, a) for d, a in enumerate(self.axes) if a is not None]
+
+
+def conv3d(
+    x: jax.Array,
+    w: jax.Array,
+    part: SpatialPartitioning,
+    stride: int = 1,
+    use_pallas: bool = False,
+) -> jax.Array:
+    """SAME-padded distributed 3D conv. x: (N, D, H, W, Cin) local shard;
+    w: (k, k, k, Cin, Cout) replicated."""
+    k = w.shape[0]
+    lo, hi = halo_lib.conv_halo_widths(k, stride)
+    pads = []
+    for d in range(3):
+        axis = part.axes[d]
+        if axis is None:
+            pads.append((lo, hi))  # plain zero padding, unsharded dim
+        else:
+            x = halo_lib.halo_exchange(x, axis, _SPATIAL_DIMS[d], lo, hi)
+            pads.append((0, 0))
+    if use_pallas:
+        from repro.kernels.conv3d import ops as conv_ops
+
+        return conv_ops.conv3d_valid(
+            jnp.pad(x, ((0, 0),) + tuple((p, q) for p, q in pads) + ((0, 0),)),
+            w,
+            stride=stride,
+        )
+    return lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride,) * 3,
+        padding=pads,
+        dimension_numbers=("NDHWC", "DHWIO", "NDHWC"),
+    )
+
+
+def deconv3d(
+    x: jax.Array,
+    w: jax.Array,
+    part: SpatialPartitioning,
+    stride: int = 2,
+) -> jax.Array:
+    """Transposed conv (U-Net up-convolution). With kernel == stride the
+    voxel->block mapping has no overlap, so it is *purely local* under
+    spatial partitioning — no halo needed (noted in DESIGN.md)."""
+    k = w.shape[0]
+    assert k == stride, "distributed deconv implemented for kernel == stride"
+    return lax.conv_transpose(
+        x,
+        w,
+        strides=(stride,) * 3,
+        padding="VALID",
+        dimension_numbers=("NDHWC", "DHWIO", "NDHWC"),
+    )
+
+
+def maxpool3d(
+    x: jax.Array,
+    part: SpatialPartitioning,
+    window: int = 2,
+    stride: int = 2,
+) -> jax.Array:
+    """Distributed max pooling. For window == stride (the paper's pooling)
+    no halo is required when local widths divide the stride."""
+    lo, hi = halo_lib.conv_halo_widths(window, stride)
+    pads = []
+    for d in range(3):
+        axis = part.axes[d]
+        if axis is None or (lo == 0 and hi == 0):
+            pads.append((lo, hi))
+        else:
+            x = halo_lib.halo_exchange(x, axis, _SPATIAL_DIMS[d], lo, hi)
+            pads.append((0, 0))
+    return lax.reduce_window(
+        x,
+        -jnp.inf if jnp.issubdtype(x.dtype, jnp.floating) else jnp.iinfo(x.dtype).min,
+        lax.max,
+        window_dimensions=(1, window, window, window, 1),
+        window_strides=(1, stride, stride, stride, 1),
+        padding=((0, 0),) + tuple(pads) + ((0, 0),),
+    )
+
+
+def avgpool3d_global(x: jax.Array, part: SpatialPartitioning) -> jax.Array:
+    """Global average pool over (possibly partitioned) spatial dims."""
+    local = jnp.mean(x, axis=_SPATIAL_DIMS)
+    for _, axis in part.active:
+        local = lax.pmean(local, axis)
+    return local
+
+
+def spatial_allgather(x: jax.Array, part: SpatialPartitioning) -> jax.Array:
+    """Gather a spatially-partitioned activation to a full local copy.
+
+    Used at the CNN->FC transition (paper: the FC layers are tiny and run
+    data-parallel; activations there are a few thousand elements)."""
+    for d, axis in part.active:
+        x = halo_lib.all_gather_dim(x, axis, _SPATIAL_DIMS[d])
+    return x

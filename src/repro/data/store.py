@@ -1,0 +1,82 @@
+"""Hyperslab sample store — the parallel-HDF5/MPI-IO analogue (paper §III-B).
+
+Samples are stored one file per sample (``.npy``, NDHWC layout without the
+N dim: (D, H, W, C)), memory-mapped on read so that
+``read_hyperslab(sample, slices)`` touches ONLY the bytes of the requested
+contiguous 3-D fragment — each (logical) rank reads exactly its hyperslab,
+which is what lets I/O strong-scale with the spatial partitioning.
+
+Byte counters are kept so the I/O benchmark can report per-rank PFS traffic
+(the quantity that must shrink as spatial parallelism grows — paper Fig. 5).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+class HyperslabStore:
+    def __init__(self, root: str):
+        self.root = root
+        with open(os.path.join(root, "index.json")) as f:
+            self.index = json.load(f)
+        self.num_samples = self.index["num_samples"]
+        self.sample_shape = tuple(self.index["sample_shape"])  # (D,H,W,C)
+        self.target_dim = self.index.get("target_dim", 0)
+        self.label_kind = self.index.get("label_kind", "vector")
+        self.bytes_read = 0
+        self.reads = 0
+        self._targets = (
+            np.load(os.path.join(root, "targets.npy"))
+            if os.path.exists(os.path.join(root, "targets.npy")) else None
+        )
+
+    def _path(self, i: int, what: str = "x") -> str:
+        return os.path.join(self.root, f"{what}_{i:06d}.npy")
+
+    def read_hyperslab(self, i: int, slices: Tuple[slice, ...],
+                       what: str = "x") -> np.ndarray:
+        """Read one contiguous (D,H,W,C) fragment via memory map."""
+        mm = np.load(self._path(i, what), mmap_mode="r")
+        out = np.array(mm[slices])
+        self.bytes_read += out.nbytes
+        self.reads += 1
+        return out
+
+    def read_full(self, i: int, what: str = "x") -> np.ndarray:
+        return self.read_hyperslab(
+            i, tuple(slice(None) for _ in self.sample_shape), what)
+
+    def target(self, i: int) -> np.ndarray:
+        return self._targets[i]
+
+    def reset_counters(self):
+        self.bytes_read = 0
+        self.reads = 0
+
+
+def write_dataset(
+    root: str,
+    cubes: Sequence[np.ndarray],        # each (D, H, W, C)
+    targets: Optional[np.ndarray] = None,  # (N, target_dim) regression
+    labels: Optional[Sequence[np.ndarray]] = None,  # per-voxel seg labels
+) -> None:
+    os.makedirs(root, exist_ok=True)
+    for i, c in enumerate(cubes):
+        np.save(os.path.join(root, f"x_{i:06d}.npy"), c)
+        if labels is not None:
+            np.save(os.path.join(root, f"y_{i:06d}.npy"), labels[i])
+    index = {
+        "num_samples": len(cubes),
+        "sample_shape": list(cubes[0].shape),
+        "target_dim": 0 if targets is None else int(targets.shape[1]),
+        "label_kind": "voxel" if labels is not None else "vector",
+    }
+    if targets is not None:
+        np.save(os.path.join(root, "targets.npy"),
+                targets.astype(np.float32))
+    with open(os.path.join(root, "index.json"), "w") as f:
+        json.dump(index, f)

@@ -1,0 +1,17 @@
+"""jit wrapper for fused BN + LeakyReLU."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.bn_act.kernel import bn_leaky_relu as _kernel
+
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "negative_slope"))
+def bn_leaky_relu(x, mean, var, scale, bias, *, eps=1e-5,
+                  negative_slope=0.01):
+    return _kernel(x, mean, var, scale, bias, eps=eps,
+                   negative_slope=negative_slope, interpret=_INTERPRET)

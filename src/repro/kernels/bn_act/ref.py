@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the fused batchnorm + LeakyReLU kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bn_leaky_relu(x, mean, var, scale, bias, *, eps=1e-5,
+                  negative_slope=0.01):
+    inv = jax.lax.rsqrt(var + eps)
+    y = (x - mean) * (inv * scale) + bias
+    if negative_slope == 1.0:
+        return y
+    return jnp.where(y >= 0, y, negative_slope * y)

@@ -1,0 +1,83 @@
+"""Direct 3D convolution as an offset-decomposed matmul (Pallas TPU).
+
+TPU adaptation of the paper's cuDNN 3-D conv (DESIGN.md §2): a k^3 SAME/
+VALID convolution is the sum over the k^3 filter offsets of a
+(voxels x Cin) @ (Cin x Cout) matmul — each offset's input view is a
+shifted (strided) window of the padded input. The k^3 shifted views are
+materialized as XLA slices in ops.py (zero-copy views of the same HBM
+buffer); the kernel itself is a pure MXU accumulation loop with explicit
+VMEM BlockSpec tiling over (sample, depth-tile, Cout-tile).
+
+This turns an awkward 5-D stencil into the shape the MXU wants
+(128-aligned GEMMs), instead of porting a GPU implicit-GEMM scheme.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv3d_kernel(*refs, k: int, cin: int, cout_tile: int,
+                   tile_voxels: int, out_shape):
+    views = refs[: k ** 3]
+    w_ref = refs[k ** 3]
+    out_ref = refs[k ** 3 + 1]
+    acc = jnp.zeros((tile_voxels, cout_tile), jnp.float32)
+    i = 0
+    for kd in range(k):
+        for kh in range(k):
+            for kw in range(k):
+                xv = views[i][...]  # (1, TD, H, W, Cin)
+                a = xv.reshape(tile_voxels, cin)
+                wm = w_ref[kd, kh, kw]  # (Cin, TCout)
+                acc = acc + jnp.dot(
+                    a, wm, preferred_element_type=jnp.float32)
+                i += 1
+    out_ref[...] = acc.reshape(out_shape).astype(out_ref.dtype)
+
+
+def conv3d_offset_matmul(
+    views: Sequence[jax.Array],  # k^3 arrays (N, Do, Ho, Wo, Cin)
+    w: jax.Array,                # (k, k, k, Cin, Cout)
+    *,
+    d_tile: int = 4,
+    cout_tile: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    k = w.shape[0]
+    cin, cout = w.shape[3], w.shape[4]
+    N, Do, Ho, Wo, _ = views[0].shape
+    d_tile = min(d_tile, Do)
+    while Do % d_tile:
+        d_tile -= 1
+    cout_tile = min(cout_tile, cout)
+    while cout % cout_tile:
+        cout_tile -= 1
+    grid = (N, Do // d_tile, cout // cout_tile)
+    tile_voxels = d_tile * Ho * Wo
+    out_block = (1, d_tile, Ho, Wo, cout_tile)
+
+    in_specs = [
+        pl.BlockSpec((1, d_tile, Ho, Wo, cin),
+                     lambda n, d, c: (n, d, 0, 0, 0))
+        for _ in range(k ** 3)
+    ]
+    in_specs.append(
+        pl.BlockSpec((k, k, k, cin, cout_tile),
+                     lambda n, d, c: (0, 0, 0, 0, c)))
+    kern = functools.partial(
+        _conv3d_kernel, k=k, cin=cin, cout_tile=cout_tile,
+        tile_voxels=tile_voxels, out_shape=out_block)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec(out_block, lambda n, d, c: (n, d, 0, 0, c)),
+        out_shape=jax.ShapeDtypeStruct((N, Do, Ho, Wo, cout),
+                                       views[0].dtype),
+        interpret=interpret,
+    )(*views, w)

@@ -1,0 +1,38 @@
+"""jit'd wrapper: builds the k^3 shifted input views and calls the kernel.
+
+On CPU (tests/benches) the kernel runs with interpret=True; on TPU the
+same BlockSpec tiling executes natively.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.conv3d.kernel import conv3d_offset_matmul
+
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("stride",))
+def conv3d_valid(x: jax.Array, w: jax.Array, stride: int = 1) -> jax.Array:
+    """VALID conv over a pre-padded input. x: (N, Din, H, W, Cin);
+    w: (k, k, k, Cin, Cout). Output spatial dim = (Din - k) // stride + 1."""
+    k = w.shape[0]
+    N, Din, Hin, Win, Cin = x.shape
+    Do = (Din - k) // stride + 1
+    Ho = (Hin - k) // stride + 1
+    Wo = (Win - k) // stride + 1
+    views = []
+    for kd in range(k):
+        for kh in range(k):
+            for kw in range(k):
+                views.append(jax.lax.slice(
+                    x,
+                    (0, kd, kh, kw, 0),
+                    (N, kd + (Do - 1) * stride + 1,
+                     kh + (Ho - 1) * stride + 1,
+                     kw + (Wo - 1) * stride + 1, Cin),
+                    (1, stride, stride, stride, 1)))
+    return conv3d_offset_matmul(views, w, interpret=_INTERPRET)

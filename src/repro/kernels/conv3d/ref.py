@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the direct 3D convolution kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def conv3d_valid(x: jax.Array, w: jax.Array, stride: int = 1) -> jax.Array:
+    """VALID 3D conv. x: (N, D, H, W, Cin) (already halo/zero padded);
+    w: (k, k, k, Cin, Cout)."""
+    return lax.conv_general_dilated(
+        x, w, window_strides=(stride,) * 3, padding="VALID",
+        dimension_numbers=("NDHWC", "DHWIO", "NDHWC"),
+    )

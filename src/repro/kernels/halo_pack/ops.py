@@ -1,0 +1,20 @@
+"""jit wrappers for halo pack/unpack."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.halo_pack.kernel import pack_depth, unpack_depth
+
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("lo", "hi"))
+def pack(x: jax.Array, lo: int, hi: int):
+    return pack_depth(x, lo, hi, interpret=_INTERPRET)
+
+
+@jax.jit
+def unpack(x: jax.Array, lo_buf: jax.Array, hi_buf: jax.Array):
+    return unpack_depth(x, lo_buf, hi_buf, interpret=_INTERPRET)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for halo pack/unpack."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def pack(x: jax.Array, dim: int, lo: int, hi: int):
+    """Extract (lo_face, hi_face) boundary slabs along ``dim``.
+    lo_face = leading ``hi`` rows (sent to the previous rank);
+    hi_face = trailing ``lo`` rows (sent to the next rank)."""
+    hi_face = lax.slice_in_dim(x, x.shape[dim] - lo, x.shape[dim], axis=dim) \
+        if lo else None
+    lo_face = lax.slice_in_dim(x, 0, hi, axis=dim) if hi else None
+    return lo_face, hi_face
+
+
+def unpack(x: jax.Array, lo_buf, hi_buf, dim: int):
+    """Concatenate received halos around the local block."""
+    parts = []
+    if lo_buf is not None:
+        parts.append(lo_buf)
+    parts.append(x)
+    if hi_buf is not None:
+        parts.append(hi_buf)
+    return jnp.concatenate(parts, axis=dim)

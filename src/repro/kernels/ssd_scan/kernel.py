@@ -1,0 +1,96 @@
+"""SSD (state-space duality) chunked scan — Pallas TPU kernel.
+
+The Mamba2 recurrence h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t^T,
+y_t = C_t . h_t, evaluated in chunks of Q tokens: the intra-chunk part is
+a pair of (Q x N)(N x Q) / (Q x Q)(Q x P) GEMMs (MXU work), the
+inter-chunk part carries a (P x N) state in a VMEM scratch across the
+sequential chunk dimension of the grid — exactly the paper's "partition
+the domain, exchange only the boundary" idea with a one-element boundary.
+
+Grid: (B, H, num_chunks). TPU grids execute the trailing dim sequentially,
+so the state scratch persists from chunk c to c+1; it is zeroed at c == 0.
+Block shapes (Q x P / Q x N with Q, P, N in {64..256}) are MXU-aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref,
+                *, q: int):
+    c_idx = pl.program_id(2)
+
+    @pl.when(c_idx == 0)
+    def _():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)    # (Q, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)     # (Q,)
+    A = a_ref[0].astype(jnp.float32)             # scalar
+    Bm = b_ref[0].astype(jnp.float32)            # (Q, N)
+    Cm = c_ref[0].astype(jnp.float32)            # (Q, N)
+
+    dA = dt * A                                   # (Q,), <= 0
+    sig = jnp.cumsum(dA)                          # (Q,)
+    # intra-chunk: scores[q,k] = C_q.B_k * exp(sig_q - sig_k) * dt_k, k<=q
+    scores = jnp.dot(Cm, Bm.T, preferred_element_type=jnp.float32)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    # mask BEFORE exp: the upper triangle of sig_q - sig_k is positive and
+    # overflows for long chunks (and would NaN the backward through where)
+    decay = jnp.exp(jnp.where(mask, sig[:, None] - sig[None, :], -jnp.inf))
+    scores = scores * decay * dt[None, :]
+    y = jnp.dot(scores, x, preferred_element_type=jnp.float32)  # (Q, P)
+    # inter-chunk: y_q += exp(sig_q) * C_q . state
+    state = state_ref[0, 0]                       # (P, N)
+    y = y + jnp.exp(sig)[:, None] * jnp.dot(
+        Cm, state.T, preferred_element_type=jnp.float32)
+    # state update: state' = exp(sig_Q) state + sum_k e^{sig_Q-sig_k} dt_k x_k B_k^T
+    w = jnp.exp(sig[-1] - sig) * dt               # (Q,)
+    state_ref[0, 0] = jnp.exp(sig[-1]) * state + jnp.dot(
+        x.T, Bm * w[:, None], preferred_element_type=jnp.float32)
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+
+def ssd_scan_chunked(
+    x: jax.Array,   # (B, L, H, P)
+    dt: jax.Array,  # (B, L, H)
+    A: jax.Array,   # (H,)
+    Bm: jax.Array,  # (B, L, N)
+    Cm: jax.Array,  # (B, L, N)
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+):
+    """Returns (y (B, L, H, P), final_state (B, H, P, N))."""
+    Bb, L, H, P = x.shape
+    N = Bm.shape[-1]
+    q = min(chunk, L)
+    while L % q:
+        q -= 1
+    nc = L // q
+    kern = functools.partial(_ssd_kernel, q=q)
+    y, state = pl.pallas_call(
+        kern,
+        grid=(Bb, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, q, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, q, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, q, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, q, N), lambda b, h, c: (b, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, q, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bb, L, H, P), x.dtype),
+            jax.ShapeDtypeStruct((Bb, H, P, N), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dt, A, Bm, Cm)
+    return y, state

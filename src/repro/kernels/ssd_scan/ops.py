@@ -1,0 +1,16 @@
+"""jit wrapper for the SSD chunked-scan kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.ssd_scan.kernel import ssd_scan_chunked
+
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 128):
+    return ssd_scan_chunked(x, dt, A, Bm, Cm, chunk=chunk,
+                            interpret=_INTERPRET)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the SSD chunked-scan kernel: the naive sequential
+state-space recurrence (exact, O(L) state updates)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def ssd_scan(x, dt, A, Bm, Cm):
+    """x: (B, L, H, P); dt: (B, L, H); A: (H,); Bm/Cm: (B, L, N).
+    Returns (y (B, L, H, P), final_state (B, H, P, N))."""
+    Bb, L, H, P = x.shape
+    N = Bm.shape[-1]
+
+    def step(s, inp):
+        x_t, dt_t, B_t, C_t = inp
+        dA = jnp.exp(dt_t * A)  # (B, H)
+        s = dA[:, :, None, None] * s + jnp.einsum(
+            "bh,bhp,bn->bhpn", dt_t, x_t, B_t)
+        y = jnp.einsum("bhpn,bn->bhp", s, C_t)
+        return s, y
+
+    s0 = jnp.zeros((Bb, H, P, N), jnp.float32)
+    xf = jnp.moveaxis(x.astype(jnp.float32), 1, 0)
+    dtf = jnp.moveaxis(dt.astype(jnp.float32), 1, 0)
+    Bf = jnp.moveaxis(Bm.astype(jnp.float32), 1, 0)
+    Cf = jnp.moveaxis(Cm.astype(jnp.float32), 1, 0)
+    s, ys = lax.scan(step, s0, (xf, dtf, Bf, Cf))
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), s

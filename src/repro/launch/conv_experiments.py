@@ -1,0 +1,81 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_EXTRA_XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+"""§Perf H3: spatial-partitioning factorization for CosmoFlow-512 training
+(the paper's own D-way / DxH-way / DxHxW-way knob, §III notation).
+
+Baseline (paper-faithful Fig. 4 config): 16-way depth partitioning.
+Variants: 4x4 DxH and 4x2x2 DxHxW on the same 256 chips.
+
+    PYTHONPATH=src python -m repro.launch.conv_experiments
+"""
+import time  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro import configs  # noqa: E402
+from repro.launch import roofline, specs  # noqa: E402
+from repro.models import cosmoflow as cf  # noqa: E402
+from repro.optim.adam import Adam, constant  # noqa: E402
+from repro.train.train_step import make_convnet_train_step  # noqa: E402
+
+VARIANTS = {
+    "16way-D": ((16, 16), ("data", "model"), ("model", None, None)),
+    "4x4-DxH": ((16, 4, 4), ("data", "md", "mh"), ("md", "mh", None)),
+    "4x2x2-DxHxW": ((16, 4, 2, 2), ("data", "md", "mh", "mw"),
+                    ("md", "mh", "mw")),
+}
+
+
+def run(arch="cosmoflow-512", gb=64):
+    cfg = configs.get_config(arch)
+    results = []
+    for name, (shape, axes, spatial) in VARIANTS.items():
+        mesh = jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+        opt = Adam(lr=constant(1e-4))
+        step = make_convnet_train_step(
+            cfg, mesh, opt, spatial_axes=tuple(spatial) if len(spatial) == 3
+            else tuple(spatial) + (None,) * (3 - len(spatial)),
+            data_axes=("data",), global_batch=gb, jit=False)
+        params = jax.eval_shape(
+            lambda: cf.init_params(jax.random.PRNGKey(0), cfg, jnp.bfloat16))
+        params = jax.tree.map(
+            lambda p: jax.ShapeDtypeStruct(
+                p.shape, p.dtype, sharding=NamedSharding(mesh, P())), params)
+        from repro.launch.dryrun import _opt_specs
+        opt_sds = _opt_specs(params, mesh)
+        W = cfg.input_width
+        sp = tuple(spatial) + (None,) * (3 - len(spatial))
+        x = jax.ShapeDtypeStruct(
+            (gb, W, W, W, cfg.in_channels), jnp.bfloat16,
+            sharding=NamedSharding(mesh, P("data", *sp, None)))
+        y = jax.ShapeDtypeStruct((gb, cfg.out_dim), jnp.float32,
+                                 sharding=NamedSharding(mesh, P("data")))
+        seed = jax.ShapeDtypeStruct((), jnp.int32)
+        t0 = time.time()
+        with jax.set_mesh(mesh):
+            lowered = jax.jit(step).lower(params, opt_sds, x, y, seed)
+            compiled = lowered.compile()
+        rl = roofline.analyze(
+            compiled, lowered.as_text(), arch=arch, shape=f"train[{name}]",
+            mesh_name="16x16", chips=256,
+            model_flops=specs.model_flops(arch, cfg, "train_4k"))
+        print(f"[{name}] compile={time.time()-t0:.1f}s")
+        print(f"  t_comp={rl.t_compute*1e3:.2f}ms t_mem={rl.t_memory*1e3:.2f}ms "
+              f"t_coll={rl.t_collective*1e3:.2f}ms bottleneck={rl.bottleneck} "
+              f"useful/HLO={rl.useful_flops_frac:.2f} "
+              f"peak={rl.peak_memory_per_device/2**30:.2f}GiB")
+        cb = rl.coll_breakdown
+        print("  collectives: " + ", ".join(
+            f"{k}={v/2**20:.1f}MiB" for k, v in cb.items()
+            if k in roofline._COLLECTIVES and v))
+        results.append((name, rl))
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,318 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_EXTRA_XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run (deliverable e): lower + compile every
+(architecture x input shape) on the production meshes and extract the
+roofline terms (deliverable g).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-2b \
+        --shape train_4k [--multi-pod] [--json out.json]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+The XLA_FLAGS line above MUST run before any other import (jax locks the
+device count on first init); 512 host devices back both the 16x16
+single-pod mesh and the 2x16x16 multi-pod mesh.
+"""
+import argparse   # noqa: E402
+import json       # noqa: E402
+import sys        # noqa: E402
+import time       # noqa: E402
+import traceback  # noqa: E402
+
+import jax        # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro import configs  # noqa: E402
+from repro.configs.base import (  # noqa: E402
+    INPUT_SHAPES, ConvNetConfig, HybridConfig, SSMConfig, TransformerConfig,
+)
+from repro.core.sharding import ShardingPolicy  # noqa: E402
+from repro.launch import roofline, specs  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import ssm_lm, transformer  # noqa: E402
+from repro.optim.adam import Adam, constant  # noqa: E402
+
+
+def _abstract_params(cfg, dtype=jnp.bfloat16):
+    if isinstance(cfg, ConvNetConfig):
+        from repro.models import cosmoflow as cf, unet3d as un
+        mod = cf if cfg.arch == "cosmoflow" else un
+        return jax.eval_shape(
+            lambda: mod.init_params(jax.random.PRNGKey(0), cfg, dtype))
+    if isinstance(cfg, (SSMConfig, HybridConfig)):
+        return jax.eval_shape(
+            lambda: ssm_lm.init_params(jax.random.PRNGKey(0), cfg, dtype))
+    return jax.eval_shape(
+        lambda: transformer.init_params(jax.random.PRNGKey(0), cfg, dtype))
+
+
+def _opt_specs(params_sds, mesh):
+    """Adam state SDS mirroring the param shardings (m, v fp32)."""
+    def f(p):
+        return jax.ShapeDtypeStruct(p.shape, jnp.float32, sharding=p.sharding)
+    m = jax.tree.map(f, params_sds)
+    v = jax.tree.map(f, params_sds)
+    from repro.optim.adam import AdamState
+    return AdamState(jax.ShapeDtypeStruct((), jnp.int32), m, v)
+
+
+def reduced_layer_configs(cfg):
+    """Two homogeneous-period reductions of ``cfg`` for the two-point FLOP
+    extrapolation (XLA cost_analysis counts a while body once; fully
+    unrolling 126-layer models is compile-prohibitive; layers are
+    homogeneous, so metric(L) is affine in the number of periods)."""
+    import dataclasses as dc
+    if isinstance(cfg, HybridConfig):
+        p = cfg.attn_every
+    elif isinstance(cfg, TransformerConfig) and cfg.alt_local_global:
+        p = 2
+    elif isinstance(cfg, ConvNetConfig):
+        return None  # python-loop layers: everything already counted
+    else:
+        p = 1
+    n_periods = cfg.num_layers / p
+    if cfg.num_layers <= 2 * p:
+        return None  # small enough to unroll fully
+    c1 = dc.replace(cfg, num_layers=p)
+    c2 = dc.replace(cfg, num_layers=2 * p)
+    return c1, c2, n_periods
+
+
+def build_lowerable(arch: str, shape_name: str, mesh, multi_pod: bool,
+                    dtype=jnp.bfloat16, cfg=None):
+    """Returns (fn, args) such that jax.jit(fn).lower(*args) is the step."""
+    if cfg is None:
+        cfg = configs.get_config(arch)
+    policy = specs.make_policy(arch, shape_name, mesh, multi_pod)
+    ishape = INPUT_SHAPES[shape_name]
+    opt = Adam(lr=constant(1e-4))
+
+    if isinstance(cfg, ConvNetConfig):
+        from repro.train.train_step import make_convnet_train_step
+        gb = specs.conv_global_batch(cfg.arch, policy, mesh)
+        step = make_convnet_train_step(
+            cfg, mesh, opt,
+            spatial_axes=("model", None, None),
+            data_axes=policy.data_axes, global_batch=gb, jit=False)
+        params = _abstract_params(cfg, dtype)
+        params = jax.tree.map(
+            lambda p: jax.ShapeDtypeStruct(
+                p.shape, p.dtype, sharding=NamedSharding(mesh, P())), params)
+        opt_sds = _opt_specs(params, mesh)
+        b = specs.batch_specs(arch, cfg, shape_name, policy, mesh, dtype)
+        seed = jax.ShapeDtypeStruct((), jnp.int32)
+        return step, (params, opt_sds, b["x"], b["y"], seed), policy
+
+    params = specs.param_shardings(_abstract_params(cfg, dtype), policy, mesh)
+
+    if ishape.kind == "train":
+        loss_fn = (ssm_lm.lm_loss
+                   if isinstance(cfg, (SSMConfig, HybridConfig))
+                   else transformer.lm_loss)
+
+        def step(p, opt_state, batch):
+            loss, grads = jax.value_and_grad(loss_fn)(
+                p, batch, cfg, policy, mesh)
+            # pin gradient shardings to the (FSDP/TP) param shardings so
+            # XLA emits reduce-scatter instead of all-reduce + slice for
+            # FSDP-sharded params (EXPERIMENTS.md SPerf H2 iter 3).
+            grads = jax.tree.map(
+                lambda g, ps: jax.lax.with_sharding_constraint(
+                    g, ps.sharding), grads, params)
+            new_p, new_opt = opt.update(grads, opt_state, p)
+            return new_p, new_opt, loss
+
+        opt_sds = _opt_specs(params, mesh)
+        b = specs.batch_specs(arch, cfg, shape_name, policy, mesh, dtype)
+        return step, (params, opt_sds, b), policy
+
+    if ishape.kind == "prefill":
+        b = specs.batch_specs(arch, cfg, shape_name, policy, mesh, dtype)
+
+        if isinstance(cfg, (SSMConfig, HybridConfig)):
+            def fn(p, batch):
+                return ssm_lm.forward(p, batch["tokens"], cfg, policy, mesh)
+            return fn, (params, {"tokens": b["tokens"]}), policy
+
+        if cfg.family in ("audio", "vlm"):
+            def fn(p, batch):
+                return transformer.forward(
+                    p, batch["tokens"], cfg, policy, mesh,
+                    extra_embeds=batch.get("image_embeds"))[0]
+            bb = {k: v for k, v in b.items() if k != "labels"}
+            return fn, (params, bb), policy
+
+        def fn(p, batch):
+            return transformer.prefill(
+                p, batch["tokens"], cfg, policy, mesh)
+        return fn, (params, {"tokens": b["tokens"]}), policy
+
+    # decode: serve_step — ONE token against a seq_len cache
+    cache = specs.cache_specs(arch, cfg, shape_name, policy, mesh, dtype)
+    toks = specs.token_specs_decode(arch, cfg, shape_name, policy, mesh)
+    mod = (ssm_lm if isinstance(cfg, (SSMConfig, HybridConfig))
+           else transformer)
+
+    def fn(p, cache, toks):
+        return mod.decode_step(p, cache, toks, cfg, policy, mesh)
+    return fn, (params, cache, toks), policy
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool,
+            verbose: bool = True):
+    from repro.core import flags
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = 512 if multi_pod else 256
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    cfg = configs.get_config(arch)
+    ishape = INPUT_SHAPES[shape_name]
+    is_conv = isinstance(cfg, ConvNetConfig)
+    remat = ishape.kind == "train" and not is_conv
+    # H2 iter 4 (EXPERIMENTS.md): Megatron-SP activations + shard_map TP
+    # attention WIN for the giant tp-plan model (llama3: 3x collective,
+    # 6.9x memory) and for SSM/hybrid stacks, but REGRESS small tp models
+    # (qwen/phi3-mini/hubert: 2.5-3x more collective bytes from the extra
+    # per-layer gathers). Enable by an explicit size rule, not universally.
+    plan = configs.plan_for(arch, shape_name)
+    is_seq = isinstance(cfg, (SSMConfig, HybridConfig))
+    big_tp = (plan == "tp" and remat
+              and getattr(cfg, "d_model", 0) >= 8192)
+    seq_acts = big_tp or (plan == "tp" and remat and is_seq)
+    t0 = time.time()
+
+    def compile_one(use_cfg, unroll):
+        fn, args, policy = build_lowerable(arch, shape_name, mesh, multi_pod,
+                                           cfg=use_cfg)
+        with flags.flags(scan_unroll=unroll, remat=remat,
+                         seq_shard_acts=seq_acts,
+                         tp_shardmap_attn=big_tp):
+            with jax.set_mesh(mesh):
+                lowered = jax.jit(fn).lower(*args)
+                return lowered, lowered.compile(), policy
+
+    # 1. full model, rolled scan: proves the combo lowers+compiles and
+    #    gives the true per-device memory picture.
+    lowered, compiled, policy = compile_one(cfg, unroll=False)
+    t1 = time.time()
+
+    # 2. two-point extrapolation for flops/bytes/collectives.
+    red = reduced_layer_configs(cfg)
+    if red is None:
+        _, c_full, _ = compile_one(cfg, unroll=True)
+        flops = float(c_full.cost_analysis().get("flops", 0.0))
+        byts = float(c_full.cost_analysis().get("bytes accessed", 0.0))
+        coll = roofline.collective_bytes(c_full.as_text())
+    else:
+        c1cfg, c2cfg, n_periods = red
+        _, e1, _ = compile_one(c1cfg, unroll=True)
+        _, e2, _ = compile_one(c2cfg, unroll=True)
+        f1 = float(e1.cost_analysis().get("flops", 0.0))
+        f2 = float(e2.cost_analysis().get("flops", 0.0))
+        b1 = float(e1.cost_analysis().get("bytes accessed", 0.0))
+        b2 = float(e2.cost_analysis().get("bytes accessed", 0.0))
+        k1 = roofline.collective_bytes(e1.as_text())
+        k2 = roofline.collective_bytes(e2.as_text())
+        scale = n_periods - 1.0
+        flops = f1 + (f2 - f1) * scale
+        byts = b1 + (b2 - b1) * scale
+        coll = {k: k1[k] + (k2[k] - k1[k]) * scale for k in k1}
+    t2 = time.time()
+
+    rl = roofline.analyze(
+        compiled, lowered.as_text(), arch=arch, shape=shape_name,
+        mesh_name=mesh_name, chips=chips,
+        model_flops=specs.model_flops(arch, cfg, shape_name))
+    # overwrite the while-undercounted metrics with the extrapolated ones
+    rl.flops_per_device = flops
+    rl.bytes_per_device = byts
+    rl.coll_bytes_per_device = float(coll["total"])
+    rl.coll_breakdown = coll
+    ma = compiled.memory_analysis()
+    if verbose:
+        print(f"[{arch} x {shape_name} x {mesh_name}] plan={policy.plan} "
+              f"compile={t1-t0:.1f}s extrapolation={t2-t1:.1f}s")
+        print(f"  memory/device: args={ma.argument_size_in_bytes/2**30:.2f} "
+              f"GiB out={ma.output_size_in_bytes/2**30:.2f} GiB "
+              f"temp={ma.temp_size_in_bytes/2**30:.2f} GiB "
+              f"alias={ma.alias_size_in_bytes/2**30:.2f} GiB")
+        print(f"  flops/device={rl.flops_per_device:.3e} "
+              f"bytes/device={rl.bytes_per_device:.3e} "
+              f"coll bytes/device={rl.coll_bytes_per_device:.3e}")
+        print(f"  roofline: t_comp={rl.t_compute*1e3:.2f}ms "
+              f"t_mem={rl.t_memory*1e3:.2f}ms "
+              f"t_coll={rl.t_collective*1e3:.2f}ms "
+              f"bottleneck={rl.bottleneck} "
+              f"useful/HLO={rl.useful_flops_frac:.2f}")
+        cb = rl.coll_breakdown
+        print("  collectives: " + ", ".join(
+            f"{k}={v/2**20:.1f}MiB" for k, v in cb.items()
+            if k in roofline._COLLECTIVES and v))
+    return rl
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--json", default=None)
+    ap.add_argument("--no-seq-shard-acts", action="store_true",
+                    help="A/B: disable sequence-sharded residual "
+                         "activations in the tp plan (§Perf H2)")
+    ap.add_argument("--no-ep-alltoall", action="store_true",
+                    help="A/B: disable the shard_map expert-parallel "
+                         "all-to-all MoE (EXPERIMENTS.md §Perf H1)")
+    args = ap.parse_args()
+
+    from repro.core import flags as _flags
+    if args.no_ep_alltoall:
+        _flags.set_flags(ep_alltoall=False)
+    if args.no_seq_shard_acts:
+        _flags.set_flags(seq_shard_acts=False)
+    combos = []
+    if args.all:
+        for arch in configs.ALL_ARCHS:
+            for shape in configs.applicable_shapes(arch):
+                combos.append((arch, shape))
+    else:
+        combos.append((args.arch, args.shape))
+
+    results, failures = [], []
+    for arch, shape in combos:
+        try:
+            rl = run_one(arch, shape, args.multi_pod)
+            results.append(rl)
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            failures.append((arch, shape, repr(e)))
+    print()
+    print(roofline.HEADER)
+    for r in results:
+        print(r.row())
+    if failures:
+        print("\nFAILURES:")
+        for f in failures:
+            print(" ", f)
+        sys.exit(1)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump([{
+                "arch": r.arch, "shape": r.shape, "mesh": r.mesh,
+                "chips": r.chips, "flops_per_device": r.flops_per_device,
+                "bytes_per_device": r.bytes_per_device,
+                "coll_bytes_per_device": r.coll_bytes_per_device,
+                "coll_breakdown": r.coll_breakdown,
+                "model_flops": r.model_flops,
+                "t_compute": r.t_compute, "t_memory": r.t_memory,
+                "t_collective": r.t_collective,
+                "bottleneck": r.bottleneck,
+                "useful_flops_frac": r.useful_flops_frac,
+                "peak_memory_per_device": r.peak_memory_per_device,
+            } for r in results], f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,137 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+compute term    = HLO_FLOPs / (chips x peak FLOP/s)
+memory term     = HLO_bytes / (chips x HBM bandwidth)
+collective term = collective_bytes / (chips x ICI link bandwidth)
+
+``cost_analysis`` of an SPMD executable reports PER-DEVICE flops/bytes, so
+the per-chip terms divide by 1; we record both conventions explicitly.
+collective_bytes is parsed from the optimized HLO text: the summed result
+sizes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops (per device per step).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+from repro.launch.mesh import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of an HLO result type, incl. tuple types."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum per-collective result bytes over the optimized HLO module."""
+    out = {c: 0 for c in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # match '<name> = <type> <op>(' where op is a collective
+        mm = re.match(r"[%\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)", s)
+        if not mm:
+            continue
+        op = mm.group(2)
+        if op.endswith("-start"):
+            op = op[:-6]
+        if op not in _COLLECTIVES:
+            continue
+        out[op] += _shape_bytes(mm.group(1))
+        out["count"] += 1
+    out["total"] = sum(out[c] for c in _COLLECTIVES)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    coll_breakdown: Dict[str, int]
+    model_flops: float  # analytic useful flops (global, per step)
+    peak_memory_per_device: float
+    output_bytes: float
+    arg_bytes: float
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_device / ICI_BW_PER_LINK
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_frac(self) -> float:
+        total = self.flops_per_device * self.chips
+        return self.model_flops / total if total else 0.0
+
+    def row(self) -> str:
+        return (f"| {self.arch} | {self.shape} | {self.mesh} | "
+                f"{self.t_compute*1e3:.2f} | {self.t_memory*1e3:.2f} | "
+                f"{self.t_collective*1e3:.2f} | {self.bottleneck} | "
+                f"{self.useful_flops_frac:.2f} | "
+                f"{self.peak_memory_per_device/2**30:.2f} |")
+
+
+def analyze(compiled, lowered_text: str, *, arch: str, shape: str,
+            mesh_name: str, chips: int, model_flops: float) -> Roofline:
+    ca = compiled.cost_analysis()
+    ma = compiled.memory_analysis()
+    coll = collective_bytes(compiled.as_text())
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_per_device=float(ca.get("flops", 0.0)),
+        bytes_per_device=float(ca.get("bytes accessed", 0.0)),
+        coll_bytes_per_device=float(coll["total"]),
+        coll_breakdown=coll,
+        model_flops=model_flops,
+        peak_memory_per_device=float(
+            ma.temp_size_in_bytes + ma.argument_size_in_bytes
+            + ma.output_size_in_bytes - ma.alias_size_in_bytes),
+        output_bytes=float(ma.output_size_in_bytes),
+        arg_bytes=float(ma.argument_size_in_bytes),
+    )
+
+
+HEADER = ("| arch | shape | mesh | t_comp (ms) | t_mem (ms) | t_coll (ms) "
+          "| bottleneck | useful/HLO flops | peak GiB/dev |\n"
+          "|---|---|---|---|---|---|---|---|---|")

@@ -1,0 +1,194 @@
+"""ShapeDtypeStruct input builders + analytic MODEL_FLOPS per
+(architecture x input shape) — consumed by the dry-run and roofline.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import FSDP_ARCHS, get_config, plan_for
+from repro.configs.base import (
+    INPUT_SHAPES, ConvNetConfig, HybridConfig, SSMConfig, TransformerConfig,
+)
+from repro.core.param_specs import infer_param_specs
+from repro.core.sharding import ShardingPolicy
+from repro.models import frontends
+
+# Paper batch sizes for the conv nets' own dry-runs (Figs. 4/7).
+CONV_GLOBAL_BATCH = {"cosmoflow": 64, "unet3d": 16}
+
+
+def conv_global_batch(arch_kind: str, policy, mesh) -> int:
+    """Paper batch sizes, scaled up to the data-axis product when needed
+    (multi-pod weak scaling: unet3d's batch 16 < 32 data shards)."""
+    n = 1
+    for a in policy.data_axes:
+        n *= mesh.shape[a]
+    return max(CONV_GLOBAL_BATCH[arch_kind], n)
+
+
+def make_policy(arch: str, shape: str, mesh, multi_pod: bool) -> ShardingPolicy:
+    data_axes = ("pod", "data") if multi_pod else ("data",)
+    return ShardingPolicy(
+        mesh=mesh, plan=plan_for(arch, shape), data_axes=data_axes,
+        model_axis="model", fsdp=arch in FSDP_ARCHS)
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def _data_spec(policy, mesh, batch: int):
+    """Batch-dim spec, or None when the batch does not divide the data axes
+    (e.g. long_500k with global_batch=1)."""
+    n = 1
+    for a in policy.data_axes:
+        n *= mesh.shape[a]
+    if batch % n:
+        return None
+    return (policy.data_axes if len(policy.data_axes) > 1
+            else policy.data_axes[0])
+
+
+def batch_specs(arch: str, cfg, shape_name: str, policy, mesh,
+                act_dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """ShapeDtypeStructs for the step-function `batch` argument."""
+    ishape = INPUT_SHAPES[shape_name]
+    B, S = ishape.global_batch, ishape.seq_len
+    dspec = _data_spec(policy, mesh, B)
+    seq_spec = policy.model_axis if policy.plan in ("cp", "ep") else None
+
+    if isinstance(cfg, ConvNetConfig):
+        W = cfg.input_width
+        Bc = conv_global_batch(cfg.arch, policy, mesh)
+        x = _sds((Bc, W, W, W, cfg.in_channels), act_dtype, mesh,
+                 P(dspec, "model", None, None, None))
+        if cfg.arch == "unet3d":
+            y = _sds((Bc, W, W, W), jnp.int32, mesh,
+                     P(dspec, "model", None, None))
+        else:
+            y = _sds((Bc, cfg.out_dim), jnp.float32, mesh, P(dspec, None))
+        return {"x": x, "y": y}
+
+    tok_spec = P(dspec, seq_spec)
+    if getattr(cfg, "family", "") == "audio":
+        return {
+            "tokens": _sds((B, S, cfg.d_model), act_dtype, mesh,
+                           P(dspec, seq_spec, None)),
+            "labels": _sds((B, S), jnp.int32, mesh, tok_spec),
+        }
+    if getattr(cfg, "family", "") == "vlm":
+        s_img = frontends.NUM_IMAGE_TOKENS
+        s_txt = S - s_img
+        return {
+            "tokens": _sds((B, s_txt), jnp.int32, mesh, tok_spec),
+            "image_embeds": _sds((B, s_img, cfg.d_model), act_dtype, mesh,
+                                 P(dspec, None, None)),
+            "labels": _sds((B, s_txt), jnp.int32, mesh, tok_spec),
+        }
+    return {
+        "tokens": _sds((B, S), jnp.int32, mesh, tok_spec),
+        "labels": _sds((B, S), jnp.int32, mesh, tok_spec),
+    }
+
+
+def cache_specs(arch: str, cfg, shape_name: str, policy, mesh,
+                dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """KV/SSM-state cache ShapeDtypeStructs for decode shapes."""
+    ishape = INPUT_SHAPES[shape_name]
+    B, Smax = ishape.global_batch, ishape.seq_len
+    dspec = _data_spec(policy, mesh, B)
+    m = policy.model_axis
+    nm = policy.model_size
+    out: Dict[str, Any] = {"pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+    def kv(n_layers, n_kv, hd):
+        spec = P(None, dspec, m, None, None)  # cache S-dim sharded (cp)
+        return (_sds((n_layers, B, Smax, n_kv, hd), dtype, mesh, spec),
+                _sds((n_layers, B, Smax, n_kv, hd), dtype, mesh, spec))
+
+    if isinstance(cfg, TransformerConfig):
+        k, v = kv(cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim)
+        out.update({"k": k, "v": v})
+        return out
+
+    # SSM / hybrid
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+    H = cfg.num_ssm_heads
+    h_spec = m if H % nm == 0 else None
+    out["conv"] = _sds((cfg.num_layers, B, cfg.conv_width - 1, conv_ch),
+                       dtype, mesh, P(None, dspec, None, None))
+    out["ssm"] = _sds((cfg.num_layers, B, H, cfg.head_dim, cfg.ssm_state),
+                      dtype, mesh, P(None, dspec, h_spec, None, None))
+    if isinstance(cfg, HybridConfig):
+        hd = cfg.d_model // cfg.num_heads
+        k, v = kv(cfg.num_attn_applications, cfg.num_kv_heads, hd)
+        out.update({"k": k, "v": v})
+    return out
+
+
+def token_specs_decode(arch: str, cfg, shape_name: str, policy, mesh):
+    ishape = INPUT_SHAPES[shape_name]
+    dspec = _data_spec(policy, mesh, ishape.global_batch)
+    return _sds((ishape.global_batch, 1), jnp.int32, mesh, P(dspec, None))
+
+
+# --------------------------------------------------------- MODEL_FLOPS ----
+def conv_net_flops_per_sample(cfg: ConvNetConfig, forward_only=False) -> float:
+    """Analytic conv FLOPs/sample (must reproduce paper Table I)."""
+    k3 = cfg.kernel_size ** 3
+    total = 0.0
+    if cfg.arch == "cosmoflow":
+        w, cin = cfg.input_width, cfg.in_channels
+        npool = min(int(math.log2(w)) - 2, len(cfg.conv_channels))
+        for i, c in enumerate(cfg.conv_channels):
+            ow = w // 2 if i == 3 else w
+            total += 2 * k3 * cin * c * ow ** 3
+            w = ow // 2 if i < npool else ow
+            cin = c
+    else:
+        w, cin, ch = cfg.input_width, cfg.in_channels, cfg.base_channels
+        enc = []
+        for _ in range(cfg.depth):
+            total += 2 * k3 * cin * ch * w ** 3
+            total += 2 * k3 * ch * 2 * ch * w ** 3
+            enc.append(2 * ch)
+            cin, ch, w = 2 * ch, 2 * ch, w // 2
+        total += 2 * k3 * cin * ch * w ** 3
+        total += 2 * k3 * ch * 2 * ch * w ** 3
+        up_in = 2 * ch
+        for skip in reversed(enc):
+            w *= 2
+            total += 2 * 8 * up_in * skip * w ** 3  # deconv
+            total += 2 * k3 * 2 * skip * skip * w ** 3
+            total += 2 * k3 * skip * skip * w ** 3
+            up_in = skip
+        total += 2 * up_in * cfg.out_dim * w ** 3
+    return total if forward_only else 3.0 * total  # fwd + bwd-data + bwd-filter
+
+
+def model_flops(arch: str, cfg, shape_name: str) -> float:
+    """Analytic 'useful' FLOPs per global step (6ND convention for LMs)."""
+    ishape = INPUT_SHAPES[shape_name]
+    if isinstance(cfg, ConvNetConfig):
+        return conv_net_flops_per_sample(cfg) * CONV_GLOBAL_BATCH[cfg.arch]
+    n_active = cfg.active_param_count()
+    tokens = ishape.global_batch * ishape.seq_len
+    if ishape.kind == "train":
+        return 6.0 * n_active * tokens
+    if ishape.kind == "prefill":
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * ishape.global_batch  # decode: one token/seq
+
+
+def param_shardings(params_abstract, policy, mesh):
+    specs = infer_param_specs(params_abstract, policy)
+    return jax.tree.map(
+        lambda sds, spec: jax.ShapeDtypeStruct(
+            sds.shape, sds.dtype, sharding=NamedSharding(mesh, spec)),
+        params_abstract, specs)

@@ -1,0 +1,91 @@
+"""Generic training launcher: ``--arch <id>`` selects any registered
+architecture (smoke variant by default — full configs are dry-run only on
+this CPU container), builds the mesh + policy + data, and trains.
+
+    PYTHONPATH=src python -m repro.launch.train --arch gemma2-2b --steps 20
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m repro.launch.train --arch mamba2-370m \
+            --data 2 --model 4 --plan cp --steps 10
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.configs.base import ConvNetConfig, HybridConfig, SSMConfig
+from repro.core.sharding import NO_POLICY, ShardingPolicy
+from repro.data.synthetic import make_token_dataset
+from repro.models import ssm_lm, transformer
+from repro.optim.adam import Adam, warmup_cosine
+from repro.train import checkpoint
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=configs.ALL_ARCHS)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--data", type=int, default=1)
+    ap.add_argument("--model", type=int, default=1)
+    ap.add_argument("--plan", default="tp", choices=["tp", "cp", "ep"])
+    ap.add_argument("--full-config", action="store_true",
+                    help="use the full (non-smoke) config — dry-run scale")
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+
+    cfg = (configs.get_config(args.arch) if args.full_config
+           else configs.get_smoke_config(args.arch))
+    if isinstance(cfg, ConvNetConfig):
+        raise SystemExit("conv nets: use examples/train_cosmoflow.py / "
+                         "examples/train_unet3d.py")
+    mesh = None
+    policy = NO_POLICY
+    if args.data * args.model > 1:
+        mesh = jax.make_mesh((args.data, args.model), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        policy = ShardingPolicy(mesh=mesh, plan=args.plan)
+    is_ssm = isinstance(cfg, (SSMConfig, HybridConfig))
+    mod = ssm_lm if is_ssm else transformer
+    print(f"{cfg.name}: {cfg.param_count()/1e6:.2f}M params, plan "
+          f"{args.plan}, mesh {dict(mesh.shape) if mesh else '1x1'}")
+
+    params = mod.init_params(jax.random.PRNGKey(0), cfg)
+    opt = Adam(lr=warmup_cosine(3e-3, 10, args.steps), grad_clip=1.0)
+    state = opt.init(params)
+    toks = make_token_dataset(100_000, cfg.vocab_size, seed=0)
+
+    @jax.jit
+    def step(p, s, batch):
+        loss, g = jax.value_and_grad(mod.lm_loss)(p, batch, cfg, policy,
+                                                  mesh)
+        p, s = opt.update(g, s, p)
+        return p, s, loss
+
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    for i in range(args.steps):
+        starts = rng.integers(0, len(toks) - args.seq - 1, args.batch)
+        x = np.stack([toks[s:s + args.seq] for s in starts])
+        y = np.stack([toks[s + 1:s + args.seq + 1] for s in starts])
+        batch = {"tokens": jnp.asarray(x), "labels": jnp.asarray(y)}
+        if getattr(cfg, "family", "") == "audio":
+            emb = jax.random.normal(jax.random.PRNGKey(i),
+                                    (args.batch, args.seq, cfg.d_model)) * .1
+            batch = {"tokens": emb, "labels": jnp.asarray(y)}
+        params, state, loss = step(params, state, batch)
+        if i % 5 == 0:
+            tokps = (i + 1) * args.batch * args.seq / (time.time() - t0)
+            print(f"step {i:4d}  loss {float(loss):.3f}  {tokps:.0f} tok/s")
+    if args.ckpt:
+        checkpoint.save(args.ckpt, params, step=args.steps)
+        print("checkpoint ->", args.ckpt)
+
+
+if __name__ == "__main__":
+    main()

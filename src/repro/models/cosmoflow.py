@@ -1,0 +1,187 @@
+"""CosmoFlow network (paper Table I), hybrid-parallel.
+
+Faithful to the extended model of §IV: n = log2(W)-2 conv blocks with
+channels (16,32,64,128,256,256,256), 3^3 SAME convs (stride 1 except block
+4 which is stride 2), stride-2 pooling after each conv, optional batch-norm
+after every conv, leaky-ReLU, then FC 2048 -> 256 -> 4 with dropout
+(keep=0.8), no conv biases (paper removed them for performance), MSE loss.
+
+Written in local-shard style: call inside ``jax.shard_map`` with activations
+partitioned per ``SpatialPartitioning`` and batch over the data axes.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ConvNetConfig
+from repro.core import dist_norm
+from repro.core.spatial_conv import (
+    SpatialPartitioning,
+    conv3d,
+    maxpool3d,
+    spatial_allgather,
+)
+
+Params = Dict[str, jax.Array]
+
+
+def num_blocks(cfg: ConvNetConfig) -> int:
+    """All variants keep the full 7-conv stack (paper Table I: 9.44M params
+    for every input size)."""
+    return len(cfg.conv_channels)
+
+
+def num_pools(cfg: ConvNetConfig) -> int:
+    """Paper §IV: pool6 is inserted for the 256^3/512^3 models and pool7
+    for 512^3 — i.e. the first log2(W)-2 blocks are pooled."""
+    return min(int(math.log2(cfg.input_width)) - 2, num_blocks(cfg))
+
+
+def init_params(key: jax.Array, cfg: ConvNetConfig, dtype=jnp.float32) -> Params:
+    n = num_blocks(cfg)
+    chans = list(cfg.conv_channels[:n])
+    params: Params = {}
+    cin = cfg.in_channels
+    k = cfg.kernel_size
+    keys = jax.random.split(key, n + len(cfg.fc_dims) + 1)
+    for i, c in enumerate(chans):
+        fan_in = k ** 3 * cin
+        params[f"conv{i}_w"] = jax.random.normal(
+            keys[i], (k, k, k, cin, c), dtype
+        ) * jnp.asarray(math.sqrt(2.0 / fan_in), dtype)
+        if cfg.batchnorm:
+            params[f"bn{i}_scale"] = jnp.ones((c,), dtype)
+            params[f"bn{i}_bias"] = jnp.zeros((c,), dtype)
+        cin = c
+    w = cfg.input_width
+    npool = num_pools(cfg)
+    for i in range(n):
+        if i == 3:
+            w //= 2  # stride-2 conv in block 4
+        if i < npool:
+            w //= 2
+    flat = chans[-1] * w ** 3
+    dims = list(cfg.fc_dims) + [cfg.out_dim]
+    for j, dout in enumerate(dims):
+        params[f"fc{j}_w"] = jax.random.normal(
+            keys[n + j], (flat, dout), dtype
+        ) * jnp.asarray(math.sqrt(1.0 / flat), dtype)
+        params[f"fc{j}_b"] = jnp.zeros((dout,), dtype)
+        flat = dout
+    return params
+
+
+def forward(
+    params: Params,
+    x: jax.Array,
+    cfg: ConvNetConfig,
+    part: SpatialPartitioning,
+    *,
+    bn_axes: Sequence[str] = (),
+    spatial_shards: Sequence[int] = (1, 1, 1),
+    train: bool = False,
+    dropout_rng: Optional[jax.Array] = None,
+    sample_ids: Optional[jax.Array] = None,  # global ids of local samples
+    use_pallas: bool = False,
+) -> jax.Array:
+    """x: local shard (N_loc, D_loc, H_loc, W_loc, Cin) -> (N_loc, out_dim).
+
+    Over-decomposition fallback (paper §V-B observes 16 GPUs/sample already
+    over-decomposes the deep layers): once the *local* width of a
+    partitioned dim would drop below 4 voxels, the dim is all-gathered and
+    the remaining (tiny) layers run replicated across the spatial group —
+    the redundant-compute factor is accounted for in ``mse_loss`` via
+    ``spatial_size``.
+    """
+    n = num_blocks(cfg)
+    npool = num_pools(cfg)
+    h = x
+    w = cfg.input_width  # global width, tracked statically
+    axes = list(part.axes)
+    for i in range(n):
+        # gather any dim whose local width is too small for halo+pool
+        for d, ax in enumerate(axes):
+            if ax is not None and w // spatial_shards[d] < 4:
+                h = spatial_allgather(
+                    h, SpatialPartitioning((None,) * d + (ax,)
+                                           + (None,) * (2 - d)))
+                axes[d] = None
+        part = SpatialPartitioning(tuple(axes))
+        stride = 2 if i == 3 else 1  # block 4 (0-indexed 3) is the strided conv
+        h = conv3d(h, params[f"conv{i}_w"], part, stride=stride,
+                   use_pallas=use_pallas)
+        if cfg.batchnorm:
+            h = dist_norm.distributed_batchnorm(
+                h, params[f"bn{i}_scale"], params[f"bn{i}_bias"], bn_axes,
+            )
+        h = jax.nn.leaky_relu(h, negative_slope=0.01)
+        if i == 3:
+            w //= 2
+        if i < npool:
+            h = maxpool3d(h, part, window=2, stride=2)
+            w //= 2
+    # CNN -> FC transition: gather the (tiny) 2^3 x C activation.
+    h = spatial_allgather(h, part)
+    h = h.reshape(h.shape[0], -1)
+    n_fc = len(cfg.fc_dims) + 1
+    for j in range(n_fc):
+        h = h @ params[f"fc{j}_w"] + params[f"fc{j}_b"]
+        if j < n_fc - 1:
+            h = jax.nn.leaky_relu(h, negative_slope=0.01)
+            if train and dropout_rng is not None:
+                # per-(sample, layer) deterministic masks: identical across
+                # every spatial shard (the FC head is computed redundantly
+                # on each model-axis shard) and invariant to the mesh shape.
+                keep = 0.8
+                layer_rng = jax.random.fold_in(dropout_rng, j)
+
+                def mask_row(sid):
+                    return jax.random.bernoulli(
+                        jax.random.fold_in(layer_rng, sid), keep,
+                        (h.shape[1],))
+
+                ids = (sample_ids if sample_ids is not None
+                       else jnp.arange(h.shape[0]))
+                mask = jax.vmap(mask_row)(ids)
+                h = jnp.where(mask, h / keep, 0.0)
+    return h
+
+
+def mse_loss(
+    params: Params,
+    x: jax.Array,
+    y: jax.Array,
+    cfg: ConvNetConfig,
+    part: SpatialPartitioning,
+    *,
+    bn_axes: Sequence[str] = (),
+    global_batch: int = 0,
+    spatial_size: int = 1,
+    spatial_shards: Sequence[int] = (1, 1, 1),
+    train: bool = True,
+    dropout_rng: Optional[jax.Array] = None,
+    sample_ids: Optional[jax.Array] = None,
+    use_pallas: bool = False,
+) -> jax.Array:
+    """LOCAL loss contribution, normalized so that ``psum`` over ALL mesh
+    axes yields the global mean loss *and* correct grads.
+
+    After ``spatial_allgather`` every model-axis shard computes the FC head
+    (and hence this loss) redundantly; dividing by ``spatial_size`` makes
+    the subsequent grad psum over the model axis exact (the all_gather
+    transpose reduce-scatters the n redundant cotangents). See
+    train/train_step.py.
+    """
+    pred = forward(
+        params, x, cfg, part, bn_axes=bn_axes, train=train,
+        spatial_shards=spatial_shards,
+        dropout_rng=dropout_rng, sample_ids=sample_ids,
+        use_pallas=use_pallas,
+    )
+    n_global = global_batch or x.shape[0]
+    per_sample = jnp.mean(jnp.square(pred - y), axis=-1)
+    return jnp.sum(per_sample) / (n_global * spatial_size)

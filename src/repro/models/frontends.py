@@ -1,0 +1,40 @@
+"""Modality frontend STUBS (the one sanctioned carve-out, see assignment).
+
+[audio] hubert-xlarge: the mel-spectrogram + conv feature extractor is not
+implemented; ``audio_embed_spec`` provides precomputed frame embeddings of
+shape (B, S, d_model) as the encoder input.
+
+[vlm] phi-3-vision: the CLIP/SigLIP vision tower + projector is not
+implemented; ``vision_embed_spec`` provides projected patch embeddings of
+shape (B, S_img, d_model) that are prepended to the text embeddings.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# phi-3-vision: number of image tokens contributed by the (stubbed) vision
+# tower for one image at base resolution (CLIP ViT-L/14 336px -> 576 + sep).
+NUM_IMAGE_TOKENS = 1024
+
+
+def audio_embed_spec(batch: int, seq: int, d_model: int,
+                     dtype=jnp.bfloat16) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((batch, seq, d_model), dtype)
+
+
+def vision_embed_spec(batch: int, d_model: int,
+                      dtype=jnp.bfloat16) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((batch, NUM_IMAGE_TOKENS, d_model), dtype)
+
+
+def synth_audio_embeds(key: jax.Array, batch: int, seq: int, d_model: int,
+                       dtype=jnp.float32) -> jax.Array:
+    """Synthetic frame embeddings for smoke tests/examples."""
+    return jax.random.normal(key, (batch, seq, d_model), dtype) * 0.02
+
+
+def synth_vision_embeds(key: jax.Array, batch: int, d_model: int,
+                        num_tokens: int = NUM_IMAGE_TOKENS,
+                        dtype=jnp.float32) -> jax.Array:
+    return jax.random.normal(key, (batch, num_tokens, d_model), dtype) * 0.02

@@ -1,0 +1,172 @@
+"""Transformer building blocks: norms, RoPE, chunked online-softmax GQA
+attention, gated MLP.
+
+Attention is written as an online-softmax scan over KV chunks (the pure-JAX
+analogue of a flash kernel): peak memory is O(S_q * chunk) instead of
+O(S_q * S_kv), which is what makes the 32k prefill and 500k decode shapes
+lowerable at all. The same function serves train (S_q == S_kv), prefill and
+decode (S_q == 1), and the sequence-parallel variants in
+``core/seq_parallel.py`` feed it shard-local q with global positions.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Params = Dict[str, jax.Array]
+
+
+# ---------------------------------------------------------------- norms ---
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * lax.rsqrt(var + eps).astype(x.dtype)) * (1.0 + scale)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+              eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mean) * lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * scale + bias
+
+
+# ----------------------------------------------------------------- RoPE ---
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd), positions: (S,) or (B, S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(
+        -math.log(theta) * jnp.arange(half, dtype=jnp.float32) / half
+    )
+    if positions.ndim == 1:
+        ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]
+        ang = ang[None, :, None, :]  # (1, S, 1, half)
+    else:
+        ang = positions.astype(jnp.float32)[..., None] * freqs
+        ang = ang[:, :, None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------ attention ---
+def chunked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    q_pos: jax.Array,
+    kv_pos: jax.Array,
+    causal: bool = True,
+    window: int = 0,
+    attn_softcap: float = 0.0,
+    kv_chunk: int = 1024,
+) -> jax.Array:
+    """Online-softmax GQA attention.
+
+    q: (B, Sq, H, hd); k, v: (B, Skv, Hkv, hd); q_pos: (Sq,) global
+    positions; kv_pos: (Skv,) global positions (-1 entries = invalid/pad).
+    ``window > 0``: only kv with q_pos - kv_pos < window attend (sliding
+    window); combined with ``causal``.
+    Returns (B, Sq, H, hd). Accumulates in fp32.
+    """
+    B, Sq, H, hd = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = hd ** -0.5
+
+    kv_chunk = min(kv_chunk, Skv)
+    pad = (-Skv) % kv_chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, (0, pad), constant_values=-1)
+    nck = (Skv + pad) // kv_chunk
+
+    # NOTE dtype discipline: q/k/v stay in their storage dtype (bf16 on the
+    # TPU target) and the MXU accumulates in f32 via preferred_element_type.
+    # Explicitly casting k/v to f32 here lets XLA hoist the convert ABOVE
+    # the context-parallel all-gather, doubling collective bytes
+    # (EXPERIMENTS.md §Perf H1, iteration 2).
+    qg = (q.reshape(B, Sq, Hkv, G, hd)
+          * jnp.asarray(scale, q.dtype))
+    ks = k.reshape(B, nck, kv_chunk, Hkv, hd)
+    vs = v.reshape(B, nck, kv_chunk, Hkv, hd)
+    ps = kv_pos.reshape(nck, kv_chunk)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        kc, vc, pc = inp
+        s = jnp.einsum(
+            "bqhgd,bkhd->bhgqk", qg, kc,
+            preferred_element_type=jnp.float32,
+        )
+        if attn_softcap > 0.0:
+            s = attn_softcap * jnp.tanh(s / attn_softcap)
+        valid = (pc >= 0)[None, :]
+        if causal:
+            valid = valid & (pc[None, :] <= q_pos[:, None])
+        if window > 0:
+            valid = valid & (q_pos[:, None] - pc[None, :] < window)
+        s = jnp.where(valid[None, None, None, :, :], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # guard fully-masked rows (m_new == -inf)
+        m_safe = jnp.where(jnp.isinf(m_new), 0.0, m_new)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(valid[None, None, None, :, :], p, 0.0)
+        corr = jnp.where(jnp.isinf(m), 0.0, jnp.exp(m - m_safe))
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p.astype(vc.dtype), vc,
+            preferred_element_type=jnp.float32,
+        )
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hkv, G, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, Sq, hd), jnp.float32)
+    (m, l, acc), _ = lax.scan(
+        step, (m0, l0, a0),
+        (jnp.moveaxis(ks, 1, 0), jnp.moveaxis(vs, 1, 0), ps),
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = jnp.moveaxis(out, 3, 1).reshape(B, Sq, H, hd)
+    return out.astype(q.dtype)
+
+
+# ------------------------------------------------------------------ MLP ---
+def gated_mlp(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+              w_down: jax.Array, activation: str = "silu") -> jax.Array:
+    act = jax.nn.silu if activation == "silu" else jax.nn.gelu
+    h = act(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+def plain_mlp(x: jax.Array, w_up: jax.Array, w_down: jax.Array,
+              activation: str = "gelu") -> jax.Array:
+    act = jax.nn.gelu if activation == "gelu" else jax.nn.silu
+    return act(x @ w_up) @ w_down
+
+
+# ----------------------------------------------------------------- init ---
+def dense_init(key: jax.Array, shape: Tuple[int, ...], dtype=jnp.float32,
+               fan_in: Optional[int] = None) -> jax.Array:
+    fi = fan_in if fan_in is not None else shape[0]
+    return jax.random.normal(key, shape, dtype) * jnp.asarray(
+        math.sqrt(1.0 / fi), dtype
+    )
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    if cap <= 0:
+        return x
+    return cap * jnp.tanh(x / cap)

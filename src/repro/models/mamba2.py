@@ -1,0 +1,221 @@
+"""Mamba2 / SSD (state-space duality, arXiv:2405.21060) blocks.
+
+The SSD chunked scan is the sequence-model analogue of the paper's spatial
+partitioning: the sequence is split into chunks (and, under context
+parallelism, into shards) and the only cross-chunk/shard dependency is the
+(H, P, N) state — a one-element halo (see core/seq_parallel.py).
+
+Recurrence per head: h_t = exp(dt_t*A) h_{t-1} + dt_t * B_t x_t^T,
+y_t = C_t . h_t + D x_t, with A < 0 so every decay factor is <= 1.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import dense_init, rmsnorm
+
+Params = Dict[str, jax.Array]
+
+
+class SSDExtras(NamedTuple):
+    final_state: jax.Array  # (B, H, P, N)
+    cumdecay: jax.Array     # (B, L, H): sum of dA from shard start to t (<=0)
+
+
+def ssd_chunked(
+    x: jax.Array,       # (B, L, H, P)
+    dt: jax.Array,      # (B, L, H) post-softplus
+    A: jax.Array,       # (H,) negative
+    Bm: jax.Array,      # (B, L, N)  (G=1 group)
+    Cm: jax.Array,      # (B, L, N)
+    *,
+    chunk: int = 256,
+    init_state: Optional[jax.Array] = None,  # (B, H, P, N)
+) -> Tuple[jax.Array, SSDExtras]:
+    """Chunked SSD scan. Returns y (B, L, H, P) and cross-shard extras."""
+    Bb, L, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, L)
+    assert L % Q == 0, f"seq {L} must divide chunk {Q}"
+    nc = L // Q
+
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    dA = dtf * A.astype(jnp.float32)  # (B, L, H), <= 0
+    xc = xf.reshape(Bb, nc, Q, H, P)
+    dtc = dtf.reshape(Bb, nc, Q, H)
+    dAc = dA.reshape(Bb, nc, Q, H)
+    Bc = Bm.astype(jnp.float32).reshape(Bb, nc, Q, N)
+    Cc = Cm.astype(jnp.float32).reshape(Bb, nc, Q, N)
+
+    sig = jnp.cumsum(dAc, axis=2)  # (B, nc, Q, H)
+    sig_last = sig[:, :, -1, :]    # (B, nc, H)
+
+    # --- intra-chunk (the "quadratic branch" of SSD) ---
+    # Lmat[q,k] = exp(sig_q - sig_k) for k <= q else 0
+    diff = sig[:, :, :, None, :] - sig[:, :, None, :, :]  # (B,nc,Q,Q,H)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    # mask BEFORE exp: upper-triangle diffs are positive (sig decreasing)
+    # and overflow for long chunks; where-after-exp also NaNs the backward.
+    Lmat = jnp.exp(jnp.where(mask[None, None, :, :, None], diff, -jnp.inf))
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc,
+                        preferred_element_type=jnp.float32)
+    y_intra = jnp.einsum(
+        "bcqk,bcqkh,bckh,bckhp->bcqhp", scores, Lmat, dtc, xc,
+        preferred_element_type=jnp.float32,
+    )
+
+    # --- per-chunk end-state contributions ---
+    decay_states = jnp.exp(sig_last[:, :, None, :] - sig)  # (B,nc,Q,H)
+    states = jnp.einsum(
+        "bckn,bckh,bckhp->bchpn", Bc, decay_states * dtc, xc,
+        preferred_element_type=jnp.float32,
+    )  # (B, nc, H, P, N)
+
+    # --- inter-chunk sequential recurrence (1-element halo over chunks) ---
+    chunk_decay = jnp.exp(sig_last)  # (B, nc, H)
+    s0 = (jnp.zeros((Bb, H, P, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(s, inp):
+        st, dec = inp
+        return dec[:, :, None, None] * s + st, s  # emit state *before* chunk
+
+    final_state, s_in = lax.scan(
+        step, s0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    s_in = jnp.moveaxis(s_in, 0, 1)  # (B, nc, H, P, N): state entering chunk
+
+    y_inter = jnp.einsum(
+        "bcqn,bcqh,bchpn->bcqhp", Cc, jnp.exp(sig), s_in,
+        preferred_element_type=jnp.float32,
+    )
+    y = (y_intra + y_inter).reshape(Bb, L, H, P)
+
+    # cumulative decay from shard start (for context-parallel pass 2)
+    chunk_off = jnp.cumsum(sig_last, axis=1) - sig_last  # (B, nc, H)
+    cumdecay = (sig + chunk_off[:, :, None, :]).reshape(Bb, L, H)
+    return y.astype(x.dtype), SSDExtras(final_state, cumdecay)
+
+
+def ssd_decode_step(
+    state: jax.Array,  # (B, H, P, N)
+    x: jax.Array,      # (B, H, P)
+    dt: jax.Array,     # (B, H)
+    A: jax.Array,      # (H,)
+    Bm: jax.Array,     # (B, N)
+    Cm: jax.Array,     # (B, N)
+) -> Tuple[jax.Array, jax.Array]:
+    """One-token SSM update. Returns (y (B,H,P), new_state)."""
+    dA = jnp.exp(dt.astype(jnp.float32) * A.astype(jnp.float32))  # (B,H)
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt.astype(jnp.float32),
+                     x.astype(jnp.float32), Bm.astype(jnp.float32))
+    new_state = dA[:, :, None, None] * state.astype(jnp.float32) + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, Cm.astype(jnp.float32))
+    return y.astype(x.dtype), new_state.astype(state.dtype)
+
+
+# ------------------------------------------------------------- the block --
+def init_block_params(key: jax.Array, d_model: int, d_inner: int,
+                      ssm_state: int, num_heads: int, conv_width: int,
+                      dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 4)
+    N = ssm_state
+    d_in_proj = 2 * d_inner + 2 * N + num_heads
+    conv_ch = d_inner + 2 * N
+    return {
+        "in_proj": dense_init(ks[0], (d_model, d_in_proj), dtype),
+        "conv_w": dense_init(ks[1], (conv_width, conv_ch), dtype,
+                             fan_in=conv_width),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "dt_bias": jnp.zeros((num_heads,), dtype),
+        "A_log": jnp.zeros((num_heads,), dtype),  # A = -exp(A_log) = -1
+        "D": jnp.ones((num_heads,), dtype),
+        "norm_scale": jnp.zeros((d_inner,), dtype),
+        "out_proj": dense_init(ks[2], (d_inner, d_model), dtype),
+    }
+
+
+def _causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: (B, L, C); w: (K, C)."""
+    K, C = w.shape
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = lax.conv_general_dilated(
+        xp, w[:, None, :],  # (K, 1, C) as (spatial, in/gr, out)
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=C,
+    )
+    return out + b
+
+
+def block_forward(
+    p: Params,
+    h: jax.Array,  # (B, L, D)
+    *,
+    num_heads: int,
+    head_dim: int,
+    ssm_state: int,
+    chunk: int = 256,
+    init_state: Optional[jax.Array] = None,
+    return_extras: bool = False,
+):
+    """Mamba2 block (pre-norm residual handled by caller)."""
+    d_inner = num_heads * head_dim
+    N = ssm_state
+    zxbcdt = h @ p["in_proj"]
+    z, xBC, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner + 2 * N], axis=-1
+    )
+    xBC = jax.nn.silu(_causal_conv1d(xBC, p["conv_w"], p["conv_b"]))
+    x, Bm, Cm = jnp.split(xBC, [d_inner, d_inner + N], axis=-1)
+    dt = jax.nn.softplus(dt + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    Bb, L, _ = x.shape
+    xh = x.reshape(Bb, L, num_heads, head_dim)
+    y, extras = ssd_chunked(xh, dt, A, Bm, Cm, chunk=min(chunk, L),
+                            init_state=init_state)
+    y = y + p["D"][None, None, :, None] * xh
+    y = y.reshape(Bb, L, d_inner)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_scale"])
+    out = y @ p["out_proj"]
+    if return_extras:
+        return out, extras
+    return out
+
+
+def block_decode(
+    p: Params,
+    h: jax.Array,           # (B, D) one token
+    conv_cache: jax.Array,  # (B, K-1, conv_ch)
+    ssm_cache: jax.Array,   # (B, H, P, N)
+    *,
+    num_heads: int,
+    head_dim: int,
+    ssm_state: int,
+):
+    d_inner = num_heads * head_dim
+    N = ssm_state
+    zxbcdt = h @ p["in_proj"]
+    z, xBC, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner + 2 * N], axis=-1
+    )
+    window = jnp.concatenate([conv_cache, xBC[:, None, :]], axis=1)  # (B,K,C)
+    new_conv_cache = window[:, 1:, :]
+    conv_out = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+    xBC = jax.nn.silu(conv_out)
+    x, Bm, Cm = jnp.split(xBC, [d_inner, d_inner + N], axis=-1)
+    dt = jax.nn.softplus(dt + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = x.reshape(-1, num_heads, head_dim)
+    y, new_state = ssd_decode_step(ssm_cache, xh, dt, A, Bm, Cm)
+    y = y + p["D"][None, :, None] * xh
+    y = y.reshape(-1, d_inner)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_scale"])
+    return y @ p["out_proj"], new_conv_cache, new_state

@@ -1,0 +1,196 @@
+"""Top-k mixture-of-experts FFN with expert parallelism.
+
+Dispatch is sort-based (no (T, E, C) one-hot — that is infeasible at
+arctic's 128 experts x 1M tokens): token copies are sorted by expert id,
+positioned within their expert group by a cumulative-count trick, and
+scattered into an (E, C, D) buffer that is sharded over the `model` mesh
+axis (expert parallelism). Under GSPMD the token-sharded -> expert-sharded
+reshard lowers to the all-to-all the paper's hybrid pipeline would issue.
+Overflow beyond capacity C is dropped (GShard-style), underflow is zeros.
+
+Includes the standard auxiliary load-balancing loss (Switch §2.2).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sharding import ShardingPolicy, NO_POLICY
+from repro.models.layers import dense_init
+
+Params = Dict[str, jax.Array]
+
+
+def init_moe_params(
+    key: jax.Array, d_model: int, d_ff: int, num_experts: int,
+    dtype=jnp.float32,
+) -> Params:
+    ks = jax.random.split(key, 4)
+    return {
+        "router": dense_init(ks[0], (d_model, num_experts), dtype),
+        "w_gate": dense_init(ks[1], (num_experts, d_model, d_ff), dtype,
+                             fan_in=d_model),
+        "w_up": dense_init(ks[2], (num_experts, d_model, d_ff), dtype,
+                           fan_in=d_model),
+        "w_down": dense_init(ks[3], (num_experts, d_ff, d_model), dtype,
+                             fan_in=d_ff),
+    }
+
+
+def _dispatch_local(xt, gate_idx, gate_vals, num_experts: int, C: int):
+    """Sort-based dispatch of local tokens into an (E, C, D) buffer.
+    Returns (buf, se, st, sw, pos_c, keep) for the combine step."""
+    T, D = xt.shape
+    top_k = gate_idx.shape[1]
+    flat_e = gate_idx.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(T), top_k)
+    flat_w = gate_vals.reshape(-1)
+    order = jnp.argsort(flat_e)
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+    counts = jnp.bincount(flat_e, length=num_experts)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(T * top_k) - starts[se]
+    keep = pos < C
+    pos_c = jnp.where(keep, pos, C)
+    buf = jnp.zeros((num_experts, C + 1, D), xt.dtype)
+    buf = buf.at[se, pos_c].set(jnp.where(keep[:, None], xt[st], 0.0),
+                                mode="drop")
+    return buf[:, :C], se, st, sw, pos_c, keep
+
+
+def _combine_local(out_buf, se, st, sw, pos_c, keep, T: int, dtype):
+    C = out_buf.shape[1]
+    gathered = out_buf[se, pos_c.clip(0, C - 1)]
+    gathered = jnp.where(keep[:, None], gathered, 0.0) \
+        * sw[:, None].astype(dtype)
+    D = out_buf.shape[-1]
+    return jnp.zeros((T, D), dtype).at[st].add(gathered)
+
+
+def moe_ffn_ep(
+    p: Params,
+    x: jax.Array,  # (B, S, D) — B sharded over data, S over model
+    *,
+    num_experts: int,
+    top_k: int,
+    mesh,
+    policy: ShardingPolicy,
+    capacity_factor: float = 1.25,
+) -> Tuple[jax.Array, jax.Array]:
+    """Expert-parallel MoE via shard_map + all-to-all (beyond-paper
+    optimization, EXPERIMENTS.md §Perf H1).
+
+    The GSPMD path sorts/scatters over the GLOBAL token set, which the
+    partitioner can only realize by all-gathering activations (~8.6 GiB /
+    layer for phi3.5-moe train_4k). Here each device dispatches only its
+    LOCAL tokens into an (E, C_loc, D) buffer and two all-to-alls over the
+    model axis move exactly the routed tokens to/from their expert shards —
+    the paper's "communicate only what the partition boundary requires"
+    principle applied to expert routing.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    B, S, D = x.shape
+    m = policy.model_axis
+    nm = policy.model_size
+    da = policy.data_axes if len(policy.data_axes) > 1 else policy.data_axes[0]
+    E_loc = num_experts // nm
+
+    def local(x, router, w_gate, w_up, w_down):
+        Bl, Sl, _ = x.shape
+        T = Bl * Sl
+        xt = x.reshape(T, D)
+        logits = xt @ router
+        probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+        gate_vals, gate_idx = jax.lax.top_k(probs, top_k)
+        gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+        me = jnp.mean(probs, axis=0)
+        ce = jnp.mean(jax.nn.one_hot(gate_idx[:, 0], num_experts), axis=0)
+        aux = num_experts * jnp.sum(me * ce)
+        aux = jax.lax.pmean(jax.lax.pmean(aux, m), policy.data_axes)
+
+        C = max(int(math.ceil(capacity_factor * T * top_k / num_experts)), 1)
+        buf, se, st, sw, pos_c, keep = _dispatch_local(
+            xt, gate_idx, gate_vals, num_experts, C)
+        # (E, C, D) -> (E_loc, C*nm, D): my experts' tokens from all shards
+        if nm > 1:
+            buf = jax.lax.all_to_all(buf, m, split_axis=0, concat_axis=1,
+                                     tiled=True)
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, w_gate)) \
+            * jnp.einsum("ecd,edf->ecf", buf, w_up)
+        out_buf = jnp.einsum("ecf,efd->ecd", h, w_down)
+        if nm > 1:
+            out_buf = jax.lax.all_to_all(out_buf, m, split_axis=1,
+                                         concat_axis=0, tiled=True)
+        out = _combine_local(out_buf, se, st, sw, pos_c, keep, T, x.dtype)
+        return out.reshape(Bl, Sl, D), aux.astype(x.dtype)
+
+    return jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(da, m, None), P(), P(m, None, None), P(m, None, None),
+                  P(m, None, None)),
+        out_specs=(P(da, m, None), P()),
+        check_vma=False,
+    )(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+
+
+def moe_ffn(
+    p: Params,
+    x: jax.Array,  # (B, S, D)
+    *,
+    num_experts: int,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    policy: ShardingPolicy = NO_POLICY,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (output (B, S, D), aux load-balance loss scalar)."""
+    B, S, D = x.shape
+    T = B * S
+    xt = x.reshape(T, D)
+
+    logits = xt @ p["router"]  # (T, E)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)  # (T, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # aux loss: fraction of tokens per expert * mean router prob per expert
+    me = jnp.mean(probs, axis=0)
+    one_hot_top1 = jax.nn.one_hot(gate_idx[:, 0], num_experts)
+    ce = jnp.mean(one_hot_top1, axis=0)
+    aux = num_experts * jnp.sum(me * ce)
+
+    # ---- sort-based dispatch ----
+    C = int(math.ceil(capacity_factor * T * top_k / num_experts))
+    C = max(C, 1)
+    flat_e = gate_idx.reshape(-1)                     # (T*k,)
+    flat_t = jnp.repeat(jnp.arange(T), top_k)
+    flat_w = gate_vals.reshape(-1)
+    order = jnp.argsort(flat_e)
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+    counts = jnp.bincount(flat_e, length=num_experts)
+    starts = jnp.cumsum(counts) - counts              # exclusive cumsum
+    pos = jnp.arange(T * top_k) - starts[se]          # slot within expert
+    keep = pos < C
+    pos_c = jnp.where(keep, pos, C)                   # C -> dropped (oob)
+
+    buf = jnp.zeros((num_experts, C + 1, D), x.dtype)
+    buf = buf.at[se, pos_c].set(jnp.where(keep[:, None], xt[st], 0.0),
+                                mode="drop")
+    buf = buf[:, :C]                                  # (E, C, D)
+    buf = policy.constrain(buf, "act_ecd")
+
+    # ---- expert computation (E sharded over model axis) ----
+    h = jax.nn.silu(
+        jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])
+    ) * jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+    out_buf = policy.constrain(out_buf, "act_ecd")
+
+    # ---- combine ----
+    gathered = out_buf[se, pos_c.clip(0, C - 1)]      # (T*k, D)
+    gathered = jnp.where(keep[:, None], gathered, 0.0) * sw[:, None].astype(x.dtype)
+    out = jnp.zeros((T, D), x.dtype).at[st].add(gathered)
+    return out.reshape(B, S, D), aux.astype(x.dtype)

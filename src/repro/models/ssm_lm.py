@@ -1,0 +1,297 @@
+"""Mamba2 language model (SSM family) and Zamba2 hybrid.
+
+mamba2-370m: 48 attention-free SSD blocks. zamba2-1.2b: 38 Mamba2 blocks
+with one *shared* attention+MLP block applied every ``attn_every`` layers
+(parameter reuse, arXiv:2411.15242 — we reuse a single shared block's
+params at every application; the concat-reproject of the original is
+simplified to a standard residual application, noted in DESIGN.md).
+
+Under ``plan='cp'`` the SSD scan runs sequence-sharded through
+core.seq_parallel.cp_ssd (state carry = 1-element halo).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import HybridConfig, SSMConfig
+from repro.core import flags, seq_parallel
+from repro.core.sharding import NO_POLICY, ShardingPolicy
+from repro.models import mamba2
+from repro.models.layers import chunked_attention, dense_init, rmsnorm, rope
+
+Params = Dict[str, Any]
+
+
+def _stack_block_params(key, cfg, L, dtype):
+    def one(k):
+        return mamba2.init_block_params(
+            k, cfg.d_model, cfg.d_inner, cfg.ssm_state,
+            cfg.num_ssm_heads, cfg.conv_width, dtype)
+    ks = jax.random.split(key, L)
+    per = [one(k) for k in ks]
+    return {name: jnp.stack([p[name] for p in per]) for name in per[0]}
+
+
+def init_params(key: jax.Array, cfg: Union[SSMConfig, HybridConfig],
+                dtype=jnp.float32) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    params: Params = {
+        "embed": jax.random.normal(k1, (cfg.vocab_size, cfg.d_model),
+                                   dtype) * 0.02,
+        "blocks": _stack_block_params(k2, cfg, cfg.num_layers, dtype),
+        "block_norms": jnp.zeros((cfg.num_layers, cfg.d_model), dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = jax.random.normal(
+            k3, (cfg.vocab_size, cfg.d_model), dtype
+        ) * jnp.asarray(math.sqrt(1.0 / cfg.d_model), dtype)
+    if isinstance(cfg, HybridConfig):
+        d, hd = cfg.d_model, cfg.d_model // cfg.num_heads
+        ks = jax.random.split(k4, 8)
+        params["shared_attn"] = {
+            "ln1": jnp.zeros((d,), dtype),
+            "ln2": jnp.zeros((d,), dtype),
+            "wq": dense_init(ks[0], (d, cfg.num_heads, hd), dtype, fan_in=d),
+            "wk": dense_init(ks[1], (d, cfg.num_kv_heads, hd), dtype, fan_in=d),
+            "wv": dense_init(ks[2], (d, cfg.num_kv_heads, hd), dtype, fan_in=d),
+            "wo": dense_init(ks[3], (cfg.num_heads, hd, d), dtype,
+                             fan_in=cfg.num_heads * hd),
+            "w_gate": dense_init(ks[4], (d, cfg.d_ff), dtype),
+            "w_up": dense_init(ks[5], (d, cfg.d_ff), dtype),
+            "w_down": dense_init(ks[6], (cfg.d_ff, d), dtype),
+        }
+    return params
+
+
+def _mamba_block(p_l, h, cfg, policy, mesh):
+    hn = rmsnorm(h, p_l["_norm"])
+    bp = {k: v for k, v in p_l.items() if k != "_norm"}
+    if policy.plan in ("cp", "ep") and mesh is not None \
+            and policy.model_size > 1:
+        # sequence-parallel SSD: project locally, scan via cp_ssd
+        d_inner, N = cfg.d_inner, cfg.ssm_state
+        zxbcdt = hn @ bp["in_proj"]
+        z, xBC, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * N], -1)
+        xBC = jax.nn.silu(
+            mamba2._causal_conv1d(xBC, bp["conv_w"], bp["conv_b"]))
+        x, Bm, Cm = jnp.split(xBC, [d_inner, d_inner + N], -1)
+        dt = jax.nn.softplus(dt + bp["dt_bias"])
+        A = -jnp.exp(bp["A_log"].astype(jnp.float32))
+        B, S, _ = x.shape
+        xh = x.reshape(B, S, cfg.num_ssm_heads, cfg.head_dim)
+        xh = policy.constrain(xh, "act_bshp")
+        y = seq_parallel.cp_ssd(xh, dt, A, Bm, Cm, mesh, policy.model_axis,
+                                chunk=cfg.chunk_size)
+        y = y + bp["D"][None, None, :, None] * xh
+        y = y.reshape(B, S, d_inner)
+        y = rmsnorm(y * jax.nn.silu(z), bp["norm_scale"])
+        out = y @ bp["out_proj"]
+    else:
+        out = mamba2.block_forward(
+            bp, hn, num_heads=cfg.num_ssm_heads, head_dim=cfg.head_dim,
+            ssm_state=cfg.ssm_state, chunk=cfg.chunk_size)
+    return h + policy.constrain(out, "act_bsd")
+
+
+def _shared_attn_block(sp, h, cfg: HybridConfig, policy, mesh, pos):
+    hn = rmsnorm(h, sp["ln1"])
+    q = rope(jnp.einsum("bsd,dhk->bshk", hn, sp["wq"]), pos, cfg.rope_theta)
+    k = rope(jnp.einsum("bsd,dhk->bshk", hn, sp["wk"]), pos, cfg.rope_theta)
+    v = jnp.einsum("bsd,dhk->bshk", hn, sp["wv"])
+    if policy.plan in ("cp", "ep") and mesh is not None \
+            and policy.model_size > 1:
+        o = seq_parallel.cp_attention(q, k, v, mesh, policy.model_axis,
+                                      causal=True)
+    else:
+        o = chunked_attention(q, k, v, q_pos=pos, kv_pos=pos, causal=True)
+    h = h + jnp.einsum("bshk,hkd->bsd", o, sp["wo"])
+    hn = rmsnorm(h, sp["ln2"])
+    out = (jax.nn.silu(hn @ sp["w_gate"]) * (hn @ sp["w_up"])) @ sp["w_down"]
+    return h + out, (k, v)
+
+
+def forward(
+    params: Params,
+    tokens: jax.Array,
+    cfg: Union[SSMConfig, HybridConfig],
+    policy: ShardingPolicy = NO_POLICY,
+    mesh=None,
+) -> jax.Array:
+    h = params["embed"][tokens]
+    h = policy.constrain(h, "act_bsd")
+    B, S = tokens.shape
+    blocks = dict(params["blocks"])
+    blocks["_norm"] = params["block_norms"]
+
+    if isinstance(cfg, HybridConfig):
+        pos = jnp.arange(S)
+        every = cfg.attn_every
+        n_groups, rem = divmod(cfg.num_layers, every)
+        grouped = {k: v[: n_groups * every].reshape(
+            (n_groups, every) + v.shape[1:]) for k, v in blocks.items()}
+        tail = {k: v[n_groups * every:] for k, v in blocks.items()}
+
+        def group_body(h, gp):
+            def inner(h, lp):
+                return _mamba_block(lp, h, cfg, policy, mesh), None
+            h, _ = lax.scan(flags.maybe_remat(inner), h, gp,
+                            **flags.scan_kwargs(every))
+            h, _ = _shared_attn_block(params["shared_attn"], h, cfg, policy,
+                                      mesh, pos)
+            return h, None
+
+        h, _ = lax.scan(group_body, h, grouped,
+                        **flags.scan_kwargs(n_groups))
+        if rem:
+            def inner(h, lp):
+                return _mamba_block(lp, h, cfg, policy, mesh), None
+            h, _ = lax.scan(flags.maybe_remat(inner), h, tail,
+                            **flags.scan_kwargs(rem))
+    else:
+        def body(h, lp):
+            return _mamba_block(lp, h, cfg, policy, mesh), None
+        h, _ = lax.scan(flags.maybe_remat(body), h, blocks,
+                        **flags.scan_kwargs(cfg.num_layers))
+
+    h = rmsnorm(h, params["final_norm"])
+    unembed = params.get("unembed", params["embed"])
+    logits = jnp.einsum("bsd,vd->bsv", h, unembed)
+    return policy.constrain(logits, "act_bsv")
+
+
+def lm_loss(params, batch, cfg, policy=NO_POLICY, mesh=None):
+    logits = forward(params, batch["tokens"], cfg, policy, mesh)
+    labels = batch["labels"]
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+    true_logit = jnp.sum(
+        jnp.where(vocab_iota == labels[..., None].astype(jnp.int32),
+                  logits.astype(jnp.float32), 0.0), axis=-1)
+    return jnp.mean(lse - true_logit).astype(logits.dtype)
+
+
+# --------------------------------------------------------------- decode ---
+def init_cache(cfg: Union[SSMConfig, HybridConfig], batch: int,
+               max_len: int, dtype=jnp.float32) -> Dict[str, jax.Array]:
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+    cache = {
+        "conv": jnp.zeros((cfg.num_layers, batch, cfg.conv_width - 1,
+                           conv_ch), dtype),
+        "ssm": jnp.zeros((cfg.num_layers, batch, cfg.num_ssm_heads,
+                          cfg.head_dim, cfg.ssm_state), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+    if isinstance(cfg, HybridConfig):
+        hd = cfg.d_model // cfg.num_heads
+        n_app = cfg.num_attn_applications
+        cache["k"] = jnp.zeros((n_app, batch, max_len, cfg.num_kv_heads, hd),
+                               dtype)
+        cache["v"] = jnp.zeros((n_app, batch, max_len, cfg.num_kv_heads, hd),
+                               dtype)
+    return cache
+
+
+def decode_step(
+    params: Params,
+    cache: Dict[str, jax.Array],
+    tokens: jax.Array,  # (B, 1)
+    cfg: Union[SSMConfig, HybridConfig],
+    policy: ShardingPolicy = NO_POLICY,
+    mesh=None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    h = params["embed"][tokens[:, 0]]  # (B, D)
+    cur = cache["pos"]
+    blocks = dict(params["blocks"])
+    blocks["_norm"] = params["block_norms"]
+
+    def mamba_step(h, lp, conv_c, ssm_c):
+        hn = rmsnorm(h, lp["_norm"])
+        bp = {k: v for k, v in lp.items() if k != "_norm"}
+        out, new_conv, new_ssm = mamba2.block_decode(
+            bp, hn, conv_c, ssm_c, num_heads=cfg.num_ssm_heads,
+            head_dim=cfg.head_dim, ssm_state=cfg.ssm_state)
+        return h + out, new_conv, new_ssm
+
+    if isinstance(cfg, HybridConfig):
+        every = cfg.attn_every
+        n_groups, rem = divmod(cfg.num_layers, every)
+        pos1 = jnp.full((1,), cur, jnp.int32)
+        new_conv_all, new_ssm_all = [], []
+        new_k, new_v = [], []
+        li = 0
+        for g in range(n_groups):
+            for j in range(every):
+                lp = {k: v[li] for k, v in blocks.items()}
+                h, nc, ns = mamba_step(h, lp, cache["conv"][li],
+                                       cache["ssm"][li])
+                new_conv_all.append(nc)
+                new_ssm_all.append(ns)
+                li += 1
+            # shared attention application g
+            sp = params["shared_attn"]
+            hs = h[:, None, :]
+            hn = rmsnorm(hs, sp["ln1"])
+            q = rope(jnp.einsum("bsd,dhk->bshk", hn, sp["wq"]), pos1,
+                     cfg.rope_theta)
+            k = rope(jnp.einsum("bsd,dhk->bshk", hn, sp["wk"]), pos1,
+                     cfg.rope_theta)
+            v = jnp.einsum("bsd,dhk->bshk", hn, sp["wv"])
+            if mesh is not None and policy.model_size > 1:
+                kc = seq_parallel.cache_update_sharded(
+                    cache["k"][g], k, cur, mesh, policy.model_axis)
+                vc = seq_parallel.cache_update_sharded(
+                    cache["v"][g], v, cur, mesh, policy.model_axis)
+            else:
+                kc = lax.dynamic_update_slice_in_dim(
+                    cache["k"][g], k.astype(cache["k"].dtype), cur, 1)
+                vc = lax.dynamic_update_slice_in_dim(
+                    cache["v"][g], v.astype(cache["v"].dtype), cur, 1)
+            if mesh is not None and policy.model_size > 1:
+                o = seq_parallel.decode_attention_sharded_kv(
+                    q, kc, vc, cur + 1, mesh, policy.model_axis)
+            else:
+                kv_pos_r = jnp.arange(kc.shape[1])
+                kv_pos = jnp.where(kv_pos_r < cur + 1, kv_pos_r, -1)
+                o = chunked_attention(q, kc, vc, q_pos=pos1, kv_pos=kv_pos,
+                                      causal=True)
+            hs = hs + jnp.einsum("bshk,hkd->bsd", o, sp["wo"])
+            hn = rmsnorm(hs, sp["ln2"])
+            hs = hs + (jax.nn.silu(hn @ sp["w_gate"]) *
+                       (hn @ sp["w_up"])) @ sp["w_down"]
+            h = hs[:, 0]
+            new_k.append(policy.constrain(kc, "kv_cache"))
+            new_v.append(policy.constrain(vc, "kv_cache"))
+        for j in range(rem):
+            lp = {k: v[li] for k, v in blocks.items()}
+            h, nc, ns = mamba_step(h, lp, cache["conv"][li], cache["ssm"][li])
+            new_conv_all.append(nc)
+            new_ssm_all.append(ns)
+            li += 1
+        new_cache = {
+            "conv": jnp.stack(new_conv_all),
+            "ssm": jnp.stack(new_ssm_all),
+            "k": jnp.stack(new_k),
+            "v": jnp.stack(new_v),
+            "pos": cur + 1,
+        }
+    else:
+        def body(h, xs):
+            lp, conv_c, ssm_c = xs
+            h, nc, ns = mamba_step(h, lp, conv_c, ssm_c)
+            return h, (nc, ns)
+
+        h, (new_conv, new_ssm) = lax.scan(
+            body, h, (blocks, cache["conv"], cache["ssm"]),
+            **flags.scan_kwargs(cfg.num_layers))
+        new_cache = {"conv": new_conv, "ssm": new_ssm, "pos": cur + 1}
+
+    h = rmsnorm(h, params["final_norm"])
+    unembed = params.get("unembed", params["embed"])
+    logits = jnp.einsum("bd,vd->bv", h, unembed)
+    return logits, new_cache

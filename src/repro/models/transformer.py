@@ -1,0 +1,470 @@
+"""Decoder/encoder transformer stacks for the assigned architectures.
+
+Layers are stacked along a leading L dim and iterated with ``lax.scan``
+(compile-time critical for the 126-layer llama3-405b dry-run). Variants:
+
+* GQA attention with RoPE, optional QKV bias (qwen1.5), attention/final
+  logit softcapping (gemma2), alternating local/global layers (gemma2 —
+  handled by scanning over *pairs* so the window is static).
+* SwiGLU / plain-GELU FFN, or MoE FFN (phi3.5-moe; arctic additionally has
+  a dense residual FFN beside the MoE).
+* Encoder mode (hubert): bidirectional attention, per-frame logits.
+* VLM mode (phi-3-vision): text tokens + precomputed patch embeddings.
+
+Parallelism: sharding constraints by logical name via ShardingPolicy; under
+``plan='cp'`` attention/SSD go through core.seq_parallel (the paper's
+spatial partitioning on the sequence axis). Decode always uses the
+S-sharded KV cache + flash-decoding merge when a mesh is present.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import TransformerConfig
+from repro.core import flags, seq_parallel
+from repro.core.sharding import NO_POLICY, ShardingPolicy
+from repro.models import moe as moe_lib
+from repro.models.layers import (
+    chunked_attention,
+    dense_init,
+    gated_mlp,
+    plain_mlp,
+    rmsnorm,
+    rope,
+    softcap,
+)
+
+Params = Dict[str, Any]
+
+
+# ----------------------------------------------------------------- init ---
+def _layer_param_shapes(cfg: TransformerConfig) -> Dict[str, Tuple[int, ...]]:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    H, Hkv, F = cfg.num_heads, cfg.num_kv_heads, cfg.d_ff
+    shapes = {
+        "ln1": (d,),
+        "ln2": (d,),
+        "wq": (d, H, hd),
+        "wk": (d, Hkv, hd),
+        "wv": (d, Hkv, hd),
+        "wo": (H, hd, d),
+    }
+    if cfg.qkv_bias:
+        shapes.update({"bq": (H, hd), "bk": (Hkv, hd), "bv": (Hkv, hd)})
+    if cfg.num_experts:
+        shapes.update({
+            "router": (d, cfg.num_experts),
+            "w_gate_e": (cfg.num_experts, d, F),
+            "w_up_e": (cfg.num_experts, d, F),
+            "w_down_e": (cfg.num_experts, F, d),
+        })
+        if cfg.moe_dense_residual:
+            Fr = cfg.dense_residual_d_ff or F
+            shapes.update({
+                "w_gate_r": (d, Fr), "w_up_r": (d, Fr), "w_down_r": (Fr, d),
+            })
+    elif cfg.gated_mlp:
+        shapes.update({"w_gate": (d, F), "w_up": (d, F), "w_down": (F, d)})
+    else:
+        shapes.update({"w_up": (d, F), "w_down": (F, d)})
+    return shapes
+
+
+def init_params(key: jax.Array, cfg: TransformerConfig,
+                dtype=jnp.float32) -> Params:
+    L, d = cfg.num_layers, cfg.d_model
+    shapes = _layer_param_shapes(cfg)
+    keys = jax.random.split(key, len(shapes) + 2)
+    layers = {}
+    for i, (name, shp) in enumerate(sorted(shapes.items())):
+        if name.startswith("ln"):
+            layers[name] = jnp.zeros((L,) + shp, dtype)
+        elif name.startswith("b"):
+            layers[name] = jnp.zeros((L,) + shp, dtype)
+        else:
+            fan_in = shp[0] if len(shp) <= 2 else (
+                shp[1] if name.endswith("_e") else shp[0]
+            )
+            if name == "wo":
+                fan_in = shp[0] * shp[1]
+            k = jax.random.fold_in(keys[i], 0)
+            flat = jax.random.normal(k, (L,) + shp, dtype)
+            layers[name] = flat * jnp.asarray(math.sqrt(1.0 / fan_in), dtype)
+    params: Params = {"layers": layers, "final_norm": jnp.zeros((d,), dtype)}
+    if cfg.embed_inputs:
+        params["embed"] = jax.random.normal(
+            keys[-2], (cfg.vocab_size, d), dtype) * 0.02
+    if not cfg.tie_embeddings:
+        params["unembed"] = jax.random.normal(
+            keys[-1], (cfg.vocab_size, d), dtype) * jnp.asarray(
+                math.sqrt(1.0 / d), dtype)
+    return params
+
+
+# ------------------------------------------------------------- blocks -----
+def _n_data(policy) -> int:
+    if policy.mesh is None:
+        return 1
+    n = 1
+    for a in policy.data_axes:
+        n *= policy.mesh.shape[a]
+    return n
+
+
+def _attn(lp, h, cfg: TransformerConfig, policy, mesh, *, window: int,
+          pos, kv_override=None, decode_cur_len=None):
+    """One attention sub-block. kv_override: (k, v) from cache for decode."""
+    B, S, d = h.shape
+    hd = cfg.resolved_head_dim
+    hn = rmsnorm(h, lp["ln1"]) if cfg.norm == "rmsnorm" else h
+    q = jnp.einsum("bsd,dhk->bshk", hn, lp["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", hn, lp["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", hn, lp["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
+    q = rope(q, pos, cfg.rope_theta)
+    k = rope(k, pos, cfg.rope_theta)
+    q = policy.constrain(q, "act_bshd")
+    k = policy.constrain(k, "act_bshd")
+    v = policy.constrain(v, "act_bshd")
+
+    if kv_override is not None:
+        # decode: q is one token; kv_override is the (updated) cache
+        kc, vc, cur_len = kv_override
+        if mesh is not None and policy.model_size > 1:
+            o = seq_parallel.decode_attention_sharded_kv(
+                q, kc, vc, cur_len, mesh, policy.model_axis,
+                window=window, attn_softcap=cfg.attn_softcap)
+        else:
+            kv_pos_r = jnp.arange(kc.shape[1])
+            kv_pos = jnp.where(kv_pos_r < cur_len, kv_pos_r, -1)
+            o = chunked_attention(
+                q, kc, vc, q_pos=pos, kv_pos=kv_pos, causal=True,
+                window=window, attn_softcap=cfg.attn_softcap)
+        new_kv = (k, v)
+    elif policy.plan in ("cp", "ep") and mesh is not None \
+            and policy.model_size > 1:
+        o = seq_parallel.cp_attention(
+            q, k, v, mesh, policy.model_axis, causal=cfg.causal,
+            window=window, attn_softcap=cfg.attn_softcap)
+        new_kv = (k, v)
+    elif (policy.plan == "tp" and mesh is not None
+          and flags.get("tp_shardmap_attn")
+          and policy.model_size > 1
+          and cfg.num_heads % policy.model_size == 0
+          and B % _n_data(policy) == 0):
+        o = seq_parallel.tp_attention(
+            q, k, v, mesh, policy.model_axis,
+            data_axes=policy.data_axes, causal=cfg.causal,
+            window=window, attn_softcap=cfg.attn_softcap)
+        new_kv = (k, v)
+    else:
+        o = chunked_attention(
+            q, k, v, q_pos=pos, kv_pos=pos, causal=cfg.causal,
+            window=window, attn_softcap=cfg.attn_softcap)
+        new_kv = (k, v)
+    out = jnp.einsum("bshk,hkd->bsd", o, lp["wo"])
+    return h + policy.constrain(out, "act_bsd"), new_kv
+
+
+def _ffn(lp, h, cfg: TransformerConfig, policy, mesh=None):
+    hn = rmsnorm(h, lp["ln2"])
+    aux = jnp.zeros((), h.dtype)
+    if cfg.num_experts:
+        p = {"router": lp["router"], "w_gate": lp["w_gate_e"],
+             "w_up": lp["w_up_e"], "w_down": lp["w_down_e"]}
+        nm = policy.model_size
+        B, S, _ = hn.shape
+        n_data = 1
+        if policy.mesh is not None:
+            for a in policy.data_axes:
+                n_data *= policy.mesh.shape[a]
+        use_ep = (flags.get("ep_alltoall") and policy.plan == "ep"
+                  and mesh is not None and nm > 1
+                  and cfg.num_experts % nm == 0 and S % nm == 0
+                  and B % n_data == 0)
+        if use_ep:
+            out, aux = moe_lib.moe_ffn_ep(
+                p, hn, num_experts=cfg.num_experts, top_k=cfg.top_k,
+                mesh=mesh, policy=policy)
+        else:
+            out, aux = moe_lib.moe_ffn(
+                p, hn, num_experts=cfg.num_experts, top_k=cfg.top_k,
+                policy=policy)
+        if cfg.moe_dense_residual:
+            out = out + gated_mlp(hn, lp["w_gate_r"], lp["w_up_r"],
+                                  lp["w_down_r"])
+    elif cfg.gated_mlp:
+        h1 = jax.nn.silu(hn @ lp["w_gate"]) * (hn @ lp["w_up"])
+        h1 = policy.constrain(h1, "act_bsf")
+        out = h1 @ lp["w_down"]
+    else:
+        h1 = jax.nn.gelu(hn @ lp["w_up"])
+        h1 = policy.constrain(h1, "act_bsf")
+        out = h1 @ lp["w_down"]
+    return h + policy.constrain(out, "act_bsd"), aux
+
+
+def _window_for_layer(cfg: TransformerConfig, which: str) -> int:
+    if not cfg.sliding_window:
+        return 0
+    if cfg.alt_local_global:
+        return cfg.sliding_window if which == "local" else 0
+    return cfg.sliding_window
+
+
+# ------------------------------------------------------------- forward ----
+def forward(
+    params: Params,
+    inputs: jax.Array,  # tokens (B, S) int32 or embeddings (B, S, D)
+    cfg: TransformerConfig,
+    policy: ShardingPolicy = NO_POLICY,
+    mesh=None,
+    *,
+    extra_embeds: Optional[jax.Array] = None,  # VLM: (B, S_img, D) prefix
+) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward (train / prefill). Returns (logits, aux_loss)."""
+    if cfg.embed_inputs and inputs.dtype in (jnp.int32, jnp.int64):
+        h = params["embed"][inputs]
+        if cfg.logit_softcap:  # gemma-style embed scaling
+            h = h * jnp.asarray(math.sqrt(cfg.d_model), h.dtype)
+    else:
+        h = inputs
+    if extra_embeds is not None:
+        h = jnp.concatenate([extra_embeds.astype(h.dtype), h], axis=1)
+    h = policy.constrain(h, "act_bsd")
+    B, S, _ = h.shape
+    pos = jnp.arange(S)
+    aux_total = jnp.zeros((), h.dtype)
+
+    layers = params["layers"]
+    if cfg.alt_local_global:
+        # scan over (local, global) pairs: static windows
+        L = cfg.num_layers
+        pair = {k: (v[0::2], v[1::2]) for k, v in layers.items()}
+
+        def body(carry, lp_pair):
+            h, aux = carry
+            lp_l = {k: v[0] for k, v in lp_pair.items()}
+            lp_g = {k: v[1] for k, v in lp_pair.items()}
+            h, _ = _attn(lp_l, h, cfg, policy, mesh,
+                         window=cfg.sliding_window, pos=pos)
+            h, a1 = _ffn(lp_l, h, cfg, policy, mesh)
+            h, _ = _attn(lp_g, h, cfg, policy, mesh, window=0, pos=pos)
+            h, a2 = _ffn(lp_g, h, cfg, policy, mesh)
+            return (h, aux + a1 + a2), None
+
+        xs = {k: jnp.stack(v, axis=1) for k, v in pair.items()}
+        pair_body = flags.maybe_remat(
+            lambda c, x: body(c, {k: (v[0], v[1]) for k, v in x.items()}))
+        (h, aux_total), _ = lax.scan(
+            pair_body, (h, aux_total), xs, **flags.scan_kwargs(L // 2))
+    else:
+        w = _window_for_layer(cfg, "local")
+
+        def body(carry, lp):
+            h, aux = carry
+            h, _ = _attn(lp, h, cfg, policy, mesh, window=w, pos=pos)
+            h, a = _ffn(lp, h, cfg, policy, mesh)
+            return (h, aux + a), None
+
+        (h, aux_total), _ = lax.scan(
+            flags.maybe_remat(body), (h, aux_total), layers,
+            **flags.scan_kwargs(cfg.num_layers))
+
+    h = rmsnorm(h, params["final_norm"])
+    unembed = params.get("unembed", params.get("embed"))
+    logits = jnp.einsum("bsd,vd->bsv", h, unembed)
+    logits = softcap(logits, cfg.logit_softcap)
+    logits = policy.constrain(logits, "act_bsv")
+    return logits, aux_total
+
+
+def lm_loss(
+    params: Params,
+    batch: Dict[str, jax.Array],
+    cfg: TransformerConfig,
+    policy: ShardingPolicy = NO_POLICY,
+    mesh=None,
+) -> jax.Array:
+    """Next-token (decoder) or per-frame (encoder) cross-entropy."""
+    logits, aux = forward(
+        params, batch["tokens"], cfg, policy, mesh,
+        extra_embeds=batch.get("image_embeds"))
+    labels = batch["labels"]
+    if logits.shape[1] != labels.shape[1]:  # VLM: image prefix has no labels
+        logits = logits[:, logits.shape[1] - labels.shape[1]:]
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    # iota-mask instead of take_along_axis: a gather on the vocab-sharded
+    # dim would make GSPMD all-gather the full logits tensor.
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+    true_logit = jnp.sum(
+        jnp.where(vocab_iota == labels[..., None].astype(jnp.int32),
+                  logits.astype(jnp.float32), 0.0), axis=-1)
+    mask = (labels >= 0).astype(jnp.float32)
+    ce = jnp.sum((lse - true_logit) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return ce.astype(logits.dtype) + 0.01 * aux
+
+
+# --------------------------------------------------------------- decode ---
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int,
+               dtype=jnp.float32) -> Dict[str, jax.Array]:
+    hd = cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((cfg.num_layers, batch, max_len, cfg.num_kv_heads, hd),
+                       dtype),
+        "v": jnp.zeros((cfg.num_layers, batch, max_len, cfg.num_kv_heads, hd),
+                       dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step(
+    params: Params,
+    cache: Dict[str, jax.Array],
+    tokens: jax.Array,  # (B, 1) int32
+    cfg: TransformerConfig,
+    policy: ShardingPolicy = NO_POLICY,
+    mesh=None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token decode against the KV cache (cache S-dim sharded over the
+    model axis when a mesh is present). Returns (logits (B, V), new cache)."""
+    h = params["embed"][tokens]
+    if cfg.logit_softcap:
+        h = h * jnp.asarray(math.sqrt(cfg.d_model), h.dtype)
+    cur = cache["pos"]  # tokens generated so far; this token's index = cur
+    pos = jnp.full((1,), cur, jnp.int32)
+    layers = params["layers"]
+    L = cfg.num_layers
+
+    def body(h, xs):
+        lp, kc, vc, li = xs
+        if cfg.alt_local_global:
+            w = cfg.sliding_window  # handled below by selecting window mask
+            is_local = (li % 2) == 0
+        else:
+            w = _window_for_layer(cfg, "local")
+            is_local = None
+        hn = rmsnorm(h, lp["ln1"])
+        q = jnp.einsum("bsd,dhk->bshk", hn, lp["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", hn, lp["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", hn, lp["wv"])
+        if cfg.qkv_bias:
+            q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
+        q = rope(q, pos, cfg.rope_theta)
+        k = rope(k, pos, cfg.rope_theta)
+        if mesh is not None and policy.model_size > 1:
+            kc = seq_parallel.cache_update_sharded(kc, k, cur, mesh,
+                                                   policy.model_axis)
+            vc = seq_parallel.cache_update_sharded(vc, v, cur, mesh,
+                                                   policy.model_axis)
+        else:
+            kc = lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype),
+                                                 cur, 1)
+            vc = lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype),
+                                                 cur, 1)
+
+        def attend(window):
+            if mesh is not None and policy.model_size > 1:
+                return seq_parallel.decode_attention_sharded_kv(
+                    q, kc, vc, cur + 1, mesh, policy.model_axis,
+                    window=window, attn_softcap=cfg.attn_softcap)
+            kv_pos_r = jnp.arange(kc.shape[1])
+            kv_pos = jnp.where(kv_pos_r < cur + 1, kv_pos_r, -1)
+            return chunked_attention(
+                q, kc, vc, q_pos=pos, kv_pos=kv_pos, causal=True,
+                window=window, attn_softcap=cfg.attn_softcap)
+
+        if cfg.alt_local_global:
+            o = jnp.where(is_local, attend(cfg.sliding_window), attend(0))
+        elif w:
+            o = attend(w)
+        else:
+            o = attend(0)
+        h = h + jnp.einsum("bshk,hkd->bsd", o, lp["wo"])
+        h, _ = _ffn(lp, h, cfg, policy)
+        kc = policy.constrain(kc, "kv_cache")
+        vc = policy.constrain(vc, "kv_cache")
+        return h, (kc, vc)
+
+    (h), (new_k, new_v) = lax.scan(
+        body, h, (layers, cache["k"], cache["v"], jnp.arange(L)),
+        **flags.scan_kwargs(L))
+    h = rmsnorm(h, params["final_norm"])
+    unembed = params.get("unembed", params.get("embed"))
+    logits = softcap(jnp.einsum("bsd,vd->bsv", h, unembed),
+                     cfg.logit_softcap)
+    new_cache = {"k": new_k, "v": new_v, "pos": cur + 1}
+    return logits[:, 0], new_cache
+
+
+def prefill(
+    params: Params,
+    tokens: jax.Array,
+    cfg: TransformerConfig,
+    policy: ShardingPolicy = NO_POLICY,
+    mesh=None,
+    max_len: Optional[int] = None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Run the full prompt, building the KV cache. Returns (last logits,
+    cache). (Used by examples/serve; the dry-run lowers forward/decode.)"""
+    B, S = tokens.shape
+    max_len = max_len or S
+    h = params["embed"][tokens]
+    if cfg.logit_softcap:
+        h = h * jnp.asarray(math.sqrt(cfg.d_model), h.dtype)
+    pos = jnp.arange(S)
+    layers = params["layers"]
+
+    def body(carry, xs):
+        h = carry
+        lp, li = xs
+        if cfg.alt_local_global:
+            # window differs per parity; both variants computed via where on
+            # the (cheap) mask path is wasteful — prefill uses pair-scan too.
+            pass
+        w = _window_for_layer(cfg, "local")
+        h, (k, v) = _attn(lp, h, cfg, policy, mesh, window=w, pos=pos)
+        h, _ = _ffn(lp, h, cfg, policy, mesh)
+        return h, (k, v)
+
+    if cfg.alt_local_global:
+        layers_pair = {k: (v[0::2], v[1::2]) for k, v in layers.items()}
+
+        def body_pair(h, lp_pair):
+            lp_l = {k: v[0] for k, v in lp_pair.items()}
+            lp_g = {k: v[1] for k, v in lp_pair.items()}
+            h, kv_l = _attn(lp_l, h, cfg, policy, mesh,
+                            window=cfg.sliding_window, pos=pos)
+            h, _ = _ffn(lp_l, h, cfg, policy, mesh)
+            h, kv_g = _attn(lp_g, h, cfg, policy, mesh, window=0, pos=pos)
+            h, _ = _ffn(lp_g, h, cfg, policy, mesh)
+            return h, (jnp.stack([kv_l[0], kv_g[0]]),
+                       jnp.stack([kv_l[1], kv_g[1]]))
+
+        xs = {k: jnp.stack(v, axis=1) for k, v in layers_pair.items()}
+        h, (ks, vs) = lax.scan(
+            lambda c, x: body_pair(c, {k: (v[0], v[1]) for k, v in x.items()}),
+            h, xs, **flags.scan_kwargs(cfg.num_layers // 2))
+        ks = ks.reshape((cfg.num_layers,) + ks.shape[2:])
+        vs = vs.reshape((cfg.num_layers,) + vs.shape[2:])
+    else:
+        h, (ks, vs) = lax.scan(
+            body, h, (layers, jnp.arange(cfg.num_layers)),
+            **flags.scan_kwargs(cfg.num_layers))
+
+    if max_len > S:
+        pad = max_len - S
+        ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    h = rmsnorm(h, params["final_norm"])
+    unembed = params.get("unembed", params.get("embed"))
+    logits = softcap(h[:, -1] @ unembed.T, cfg.logit_softcap)
+    cache = {"k": ks, "v": vs, "pos": jnp.asarray(S, jnp.int32)}
+    return logits, cache

@@ -1,0 +1,133 @@
+"""3D U-Net (Çiçek et al. 2016), hybrid-parallel (paper §II-C).
+
+Encoder: ``depth`` levels of [conv(ch)->BN->ReLU, conv(2ch)->BN->ReLU,
+maxpool2]; bottleneck convs; decoder: 2x2x2-stride-2 up-convolution
+(purely local under spatial partitioning — see DESIGN.md), channel concat
+with the skip connection (same partitioning at the same resolution, so the
+residual redistribution of paper §III-A is a local concat here), two convs;
+final 1x1x1 conv to per-voxel class logits; softmax cross-entropy with
+spatially-sharded labels.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ConvNetConfig
+from repro.core import dist_norm
+from repro.core.spatial_conv import (
+    SpatialPartitioning,
+    conv3d,
+    deconv3d,
+    maxpool3d,
+)
+
+Params = Dict[str, jax.Array]
+
+
+def _conv_init(key, k, cin, cout, dtype):
+    fan_in = k ** 3 * cin
+    return jax.random.normal(key, (k, k, k, cin, cout), dtype) * jnp.asarray(
+        math.sqrt(2.0 / fan_in), dtype
+    )
+
+
+def init_params(key: jax.Array, cfg: ConvNetConfig, dtype=jnp.float32) -> Params:
+    params: Params = {}
+    k = cfg.kernel_size
+    keys = iter(jax.random.split(key, 8 * cfg.depth + 8))
+    cin, ch = cfg.in_channels, cfg.base_channels
+    enc_out = []
+    for lvl in range(cfg.depth):
+        params[f"enc{lvl}_w0"] = _conv_init(next(keys), k, cin, ch, dtype)
+        params[f"enc{lvl}_s0"] = jnp.ones((ch,), dtype)
+        params[f"enc{lvl}_b0"] = jnp.zeros((ch,), dtype)
+        params[f"enc{lvl}_w1"] = _conv_init(next(keys), k, ch, 2 * ch, dtype)
+        params[f"enc{lvl}_s1"] = jnp.ones((2 * ch,), dtype)
+        params[f"enc{lvl}_b1"] = jnp.zeros((2 * ch,), dtype)
+        enc_out.append(2 * ch)
+        cin, ch = 2 * ch, 2 * ch
+    params["mid_w0"] = _conv_init(next(keys), k, cin, ch, dtype)
+    params["mid_s0"] = jnp.ones((ch,), dtype)
+    params["mid_b0"] = jnp.zeros((ch,), dtype)
+    params["mid_w1"] = _conv_init(next(keys), k, ch, 2 * ch, dtype)
+    params["mid_s1"] = jnp.ones((2 * ch,), dtype)
+    params["mid_b1"] = jnp.zeros((2 * ch,), dtype)
+    up_in = 2 * ch
+    for lvl in reversed(range(cfg.depth)):
+        skip = enc_out[lvl]
+        params[f"dec{lvl}_up"] = _conv_init(next(keys), 2, up_in, skip, dtype)
+        params[f"dec{lvl}_w0"] = _conv_init(next(keys), k, 2 * skip, skip, dtype)
+        params[f"dec{lvl}_s0"] = jnp.ones((skip,), dtype)
+        params[f"dec{lvl}_b0"] = jnp.zeros((skip,), dtype)
+        params[f"dec{lvl}_w1"] = _conv_init(next(keys), k, skip, skip, dtype)
+        params[f"dec{lvl}_s1"] = jnp.ones((skip,), dtype)
+        params[f"dec{lvl}_b1"] = jnp.zeros((skip,), dtype)
+        up_in = skip
+    params["head_w"] = _conv_init(next(keys), 1, up_in, cfg.out_dim, dtype)
+    return params
+
+
+def _conv_bn_relu(h, w, s, b, part, bn_axes, use_pallas):
+    h = conv3d(h, w, part, stride=1, use_pallas=use_pallas)
+    h = dist_norm.distributed_batchnorm(h, s, b, bn_axes)
+    return jax.nn.relu(h)
+
+
+def forward(
+    params: Params,
+    x: jax.Array,
+    cfg: ConvNetConfig,
+    part: SpatialPartitioning,
+    *,
+    bn_axes: Sequence[str] = (),
+    use_pallas: bool = False,
+) -> jax.Array:
+    """x: (N_loc, D_loc, H_loc, W_loc, Cin) -> per-voxel logits (..., out_dim)."""
+    h = x
+    skips = []
+    for lvl in range(cfg.depth):
+        h = _conv_bn_relu(h, params[f"enc{lvl}_w0"], params[f"enc{lvl}_s0"],
+                          params[f"enc{lvl}_b0"], part, bn_axes, use_pallas)
+        h = _conv_bn_relu(h, params[f"enc{lvl}_w1"], params[f"enc{lvl}_s1"],
+                          params[f"enc{lvl}_b1"], part, bn_axes, use_pallas)
+        skips.append(h)
+        h = maxpool3d(h, part, window=2, stride=2)
+    h = _conv_bn_relu(h, params["mid_w0"], params["mid_s0"], params["mid_b0"],
+                      part, bn_axes, use_pallas)
+    h = _conv_bn_relu(h, params["mid_w1"], params["mid_s1"], params["mid_b1"],
+                      part, bn_axes, use_pallas)
+    for lvl in reversed(range(cfg.depth)):
+        h = deconv3d(h, params[f"dec{lvl}_up"], part, stride=2)
+        h = jnp.concatenate([skips[lvl], h], axis=-1)
+        h = _conv_bn_relu(h, params[f"dec{lvl}_w0"], params[f"dec{lvl}_s0"],
+                          params[f"dec{lvl}_b0"], part, bn_axes, use_pallas)
+        h = _conv_bn_relu(h, params[f"dec{lvl}_w1"], params[f"dec{lvl}_s1"],
+                          params[f"dec{lvl}_b1"], part, bn_axes, use_pallas)
+    return conv3d(h, params["head_w"], part, stride=1)
+
+
+def segmentation_loss(
+    params: Params,
+    x: jax.Array,
+    labels: jax.Array,
+    cfg: ConvNetConfig,
+    part: SpatialPartitioning,
+    *,
+    bn_axes: Sequence[str] = (),
+    global_voxels: int = 0,
+    use_pallas: bool = False,
+) -> jax.Array:
+    """LOCAL per-voxel CE contribution (sum over local voxels / global voxel
+    count): ``psum`` over all mesh axes yields the global mean. Labels are
+    spatially sharded like the input (the paper's point: ground truth is as
+    large as the input and must be spatially distributed too)."""
+    logits = forward(params, x, cfg, part, bn_axes=bn_axes,
+                     use_pallas=use_pallas)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    denom = global_voxels or nll.size
+    return jnp.sum(nll) / denom

@@ -1,0 +1,111 @@
+"""Adam optimizer (paper §IV: beta1=0.9, beta2=0.999, eps=1e-8) and SGD,
+as pure pytree transforms (no optax dependency in this environment).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Adam:
+    lr: Callable[[jax.Array], jax.Array]  # schedule: step -> lr
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float = 0.0
+
+    def init(self, params: Any) -> AdamState:
+        zeros = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return AdamState(jnp.zeros((), jnp.int32), zeros,
+                         jax.tree.map(jnp.copy, zeros))
+
+    def update(self, grads: Any, state: AdamState,
+               params: Any) -> Tuple[Any, AdamState]:
+        step = state.step + 1
+        if self.grad_clip > 0:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, self.grad_clip / (gnorm + 1e-12))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        b1, b2 = self.b1, self.b2
+        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                         state.m, grads)
+        v = jax.tree.map(lambda v, g: b2 * v + (1 - b2)
+                         * jnp.square(g.astype(jnp.float32)), state.v, grads)
+        t = step.astype(jnp.float32)
+        mhat_c = 1.0 / (1 - b1 ** t)
+        vhat_c = 1.0 / (1 - b2 ** t)
+        lr = self.lr(step)
+
+        def upd(p, m, v):
+            u = (m * mhat_c) / (jnp.sqrt(v * vhat_c) + self.eps)
+            if self.weight_decay:
+                u = u + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, AdamState(step, m, v)
+
+
+@dataclasses.dataclass(frozen=True)
+class SGD:
+    lr: Callable[[jax.Array], jax.Array]
+    momentum: float = 0.9
+
+    def init(self, params):
+        return AdamState(
+            jnp.zeros((), jnp.int32),
+            jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+            None,
+        )
+
+    def update(self, grads, state, params):
+        step = state.step + 1
+        m = jax.tree.map(
+            lambda m, g: self.momentum * m + g.astype(jnp.float32),
+            state.m, grads)
+        lr = self.lr(step)
+        new_params = jax.tree.map(
+            lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype),
+            params, m)
+        return new_params, AdamState(step, m, None)
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+# ------------------------------------------------------------ schedules ---
+def linear_decay(init_lr: float, total_steps: int,
+                 final_frac: float = 0.01) -> Callable:
+    """Paper §IV: linear decay to 0.01x of the initial rate."""
+    def fn(step):
+        t = jnp.clip(step.astype(jnp.float32) / total_steps, 0.0, 1.0)
+        return init_lr * (1.0 - (1.0 - final_frac) * t)
+    return fn
+
+
+def constant(lr: float) -> Callable:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_cosine(peak_lr: float, warmup: int, total: int) -> Callable:
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = peak_lr * s / max(warmup, 1)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * peak_lr * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup, warm, cos)
+    return fn

@@ -1,0 +1,61 @@
+"""Sharded checkpointing without external deps.
+
+Parameters are saved as one ``.npy`` per leaf (gathered to host) plus a
+manifest with the pytree structure; restore re-places leaves under the
+given shardings. Adequate for the example drivers; a production deployment
+would swap in tensorstore/orbax behind the same interface.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _sanitize(path: str) -> str:
+    return re.sub(r"[^A-Za-z0-9_.-]", "_", path)
+
+
+def save(ckpt_dir: str, tree: Any, step: int = 0) -> None:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    leaves, treedef = jax.tree.flatten(tree)
+    paths = jax.tree.leaves(
+        jax.tree_util.tree_map_with_path(lambda p, _: jax.tree_util.keystr(p),
+                                         tree))
+    manifest = {"step": step, "leaves": []}
+    for p, leaf in zip(paths, leaves):
+        name = _sanitize(p) + ".npy"
+        arr = np.asarray(jax.device_get(leaf))
+        np.save(os.path.join(ckpt_dir, name), arr)
+        manifest["leaves"].append(
+            {"path": p, "file": name, "dtype": str(arr.dtype),
+             "shape": list(arr.shape)})
+    with open(os.path.join(ckpt_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+
+
+def restore(ckpt_dir: str, like: Any, shardings: Optional[Any] = None) -> Any:
+    with open(os.path.join(ckpt_dir, "manifest.json")) as f:
+        manifest = json.load(f)
+    by_path = {l["path"]: l for l in manifest["leaves"]}
+
+    def load_leaf(path, leaf, sh=None):
+        entry = by_path[jax.tree_util.keystr(path)]
+        arr = np.load(os.path.join(ckpt_dir, entry["file"]))
+        if sh is not None:
+            return jax.device_put(arr, sh)
+        return jnp.asarray(arr)
+
+    if shardings is None:
+        return jax.tree_util.tree_map_with_path(load_leaf, like)
+    return jax.tree_util.tree_map_with_path(load_leaf, like, shardings)
+
+
+def latest_step(ckpt_dir: str) -> int:
+    with open(os.path.join(ckpt_dir, "manifest.json")) as f:
+        return json.load(f)["step"]

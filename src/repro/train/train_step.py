@@ -1,0 +1,173 @@
+"""Train-step builders.
+
+Two distribution styles, matching DESIGN.md:
+
+* Conv nets (the paper's models): whole-model ``jax.shard_map`` with
+  explicit halo collectives — grads are ``psum``-reduced over every mesh
+  axis (the data-parallel allreduce of paper Fig. 2, green arrows, fused
+  with the spatial-partition reduction).
+* Sequence models: GSPMD ``jax.jit`` with sharding constraints from the
+  ShardingPolicy; XLA inserts the collectives.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ConvNetConfig
+from repro.core.sharding import ShardingPolicy
+from repro.core.spatial_conv import SpatialPartitioning
+from repro.models import cosmoflow as cosmoflow_lib
+from repro.models import unet3d as unet_lib
+
+
+# ----------------------------------------------------------- conv nets ----
+def make_convnet_train_step(
+    cfg: ConvNetConfig,
+    mesh,
+    optimizer,
+    *,
+    spatial_axes: Tuple[Optional[str], ...] = ("model", None, None),
+    data_axes: Tuple[str, ...] = ("data",),
+    global_batch: int,
+    use_pallas: bool = False,
+    jit: bool = True,
+):
+    """Returns step(params, opt_state, x, y, rng) -> (params, opt, loss).
+
+    x: (N, D, H, W, C) sharded (data..., spatial...); y: (N, out) or voxel
+    labels (N, D, H, W) for unet.
+    """
+    part = SpatialPartitioning(tuple(spatial_axes))
+    spatial_names = tuple(a for a in spatial_axes if a)
+    all_axes = tuple(data_axes) + spatial_names
+    n_spatial = 1
+    for a in spatial_names:
+        n_spatial *= mesh.shape[a]
+    shards3 = tuple(mesh.shape[a] if a else 1 for a in spatial_axes)
+
+    def local_step(params, opt_state, x, y, seed):
+        # dropout rng is NOT folded per-device: masks are derived per global
+        # sample id so the redundant FC compute on every spatial shard sees
+        # identical masks and results are mesh-shape invariant.
+        rng = jax.random.PRNGKey(seed)
+        n_loc = x.shape[0]
+        data_idx = (lax.axis_index(data_axes) if len(data_axes) > 1 or
+                    mesh.shape[data_axes[0]] > 1 else 0)
+        sample_ids = data_idx * n_loc + jnp.arange(n_loc)
+
+        if cfg.arch == "cosmoflow":
+            def loss_fn(p):
+                return cosmoflow_lib.mse_loss(
+                    p, x, y, cfg, part, bn_axes=all_axes,
+                    global_batch=global_batch, spatial_size=n_spatial,
+                    spatial_shards=shards3, sample_ids=sample_ids,
+                    train=True, dropout_rng=rng, use_pallas=use_pallas)
+        else:
+            gv = global_batch * cfg.input_width ** 3
+
+            def loss_fn(p):
+                return unet_lib.segmentation_loss(
+                    p, x, y, cfg, part, bn_axes=all_axes,
+                    global_voxels=gv, use_pallas=use_pallas)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        grads = jax.tree.map(lambda g: lax.psum(g, all_axes), grads)
+        loss = lax.psum(loss, all_axes)
+        new_params, new_opt = optimizer.update(grads, opt_state, params)
+        return new_params, new_opt, loss
+
+    dspec = data_axes if len(data_axes) > 1 else data_axes[0]
+    x_spec = P(dspec, *spatial_axes, None)
+    y_spec = (P(dspec, *spatial_axes) if cfg.arch == "unet3d"
+              else P(dspec, None))
+    mapped = jax.shard_map(
+        local_step, mesh=mesh,
+        in_specs=(P(), P(), x_spec, y_spec, P()),
+        out_specs=(P(), P(), P()),
+        check_vma=False,
+    )
+    if not jit:
+        return mapped
+    return jax.jit(mapped, donate_argnums=(0, 1))
+
+
+def make_convnet_eval_step(
+    cfg: ConvNetConfig,
+    mesh,
+    *,
+    spatial_axes: Tuple[Optional[str], ...] = ("model", None, None),
+    data_axes: Tuple[str, ...] = ("data",),
+    global_batch: int,
+    use_pallas: bool = False,
+):
+    """Returns eval(params, x, y) -> (loss, preds) (cosmoflow only)."""
+    part = SpatialPartitioning(tuple(spatial_axes))
+    spatial_names = tuple(a for a in spatial_axes if a)
+    all_axes = tuple(data_axes) + spatial_names
+    n_spatial = 1
+    for a in spatial_names:
+        n_spatial *= mesh.shape[a]
+
+    shards3 = tuple(mesh.shape[a] if a else 1 for a in spatial_axes)
+
+    def local_eval(params, x, y):
+        pred = cosmoflow_lib.forward(
+            params, x, cfg, part, bn_axes=all_axes, train=False,
+            spatial_shards=shards3, use_pallas=use_pallas)
+        per = jnp.mean(jnp.square(pred - y), axis=-1)
+        loss = lax.psum(jnp.sum(per) / (global_batch * n_spatial), all_axes)
+        return loss, pred
+
+    dspec = data_axes if len(data_axes) > 1 else data_axes[0]
+    x_spec = P(dspec, *spatial_axes, None)
+    return jax.jit(jax.shard_map(
+        local_eval, mesh=mesh,
+        in_specs=(P(), x_spec, P(dspec, None)),
+        out_specs=(P(), P(dspec, None)),
+        check_vma=False,
+    ))
+
+
+# ------------------------------------------------------ sequence models ---
+def make_lm_train_step(
+    loss_fn: Callable,  # (params, batch, cfg, policy, mesh) -> scalar
+    cfg,
+    mesh,
+    policy: ShardingPolicy,
+    optimizer,
+    *,
+    batch_specs: Dict[str, P],
+    param_specs: Any,  # pytree of P matching params
+    jit: bool = True,
+):
+    """GSPMD train step for transformer/SSM/hybrid models."""
+
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(
+            params, batch, cfg, policy, mesh)
+        new_params, new_opt = optimizer.update(grads, opt_state, params)
+        return new_params, new_opt, loss
+
+    if not jit or mesh is None:
+        return step
+
+    def nshard(spec_tree, tree):
+        return jax.tree.map(
+            lambda s: NamedSharding(mesh, s), spec_tree,
+            is_leaf=lambda x: isinstance(x, P))
+
+    p_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), param_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+    opt_sh = None  # inferred: optimizer state mirrors params
+    b_sh = {k: NamedSharding(mesh, v) for k, v in batch_specs.items()}
+    return jax.jit(
+        step,
+        in_shardings=(p_sh, None, b_sh),
+        donate_argnums=(0, 1),
+    )

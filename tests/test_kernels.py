@@ -1,0 +1,87 @@
+"""Per-kernel allclose sweeps vs the pure-jnp oracles (interpret=True)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.mark.parametrize("shape,k,cout,stride", [
+    ((2, 10, 10, 10, 3), 3, 8, 1),
+    ((1, 9, 9, 9, 4), 3, 16, 2),
+    ((2, 12, 8, 8, 8), 5, 4, 1),
+    ((1, 6, 6, 6, 2), 1, 8, 1),
+    ((1, 7, 7, 7, 16), 3, 32, 1),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_conv3d_kernel(shape, k, cout, stride, dtype):
+    from repro.kernels.conv3d import ops, ref
+    x = jax.random.normal(jax.random.PRNGKey(0), shape, dtype)
+    w = jax.random.normal(jax.random.PRNGKey(1),
+                          (k, k, k, shape[-1], cout), dtype) * 0.1
+    got = ops.conv3d_valid(x, w, stride=stride)
+    want = ref.conv3d_valid(x, w, stride=stride)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("shape,lo,hi", [
+    ((2, 8, 4, 4, 3), 1, 1), ((1, 6, 8, 4, 2), 2, 1), ((2, 5, 3, 3, 4), 1, 2),
+])
+def test_halo_pack_unpack(shape, lo, hi):
+    from repro.kernels.halo_pack import ops, ref
+    x = jax.random.normal(jax.random.PRNGKey(0), shape)
+    lo_f, hi_f = ops.pack(x, lo, hi)
+    rlo, rhi = ref.pack(x, 1, lo, hi)
+    np.testing.assert_allclose(np.asarray(lo_f), np.asarray(rlo))
+    np.testing.assert_allclose(np.asarray(hi_f), np.asarray(rhi))
+    lo_buf = jax.random.normal(jax.random.PRNGKey(1),
+                               shape[:1] + (lo,) + shape[2:])
+    hi_buf = jax.random.normal(jax.random.PRNGKey(2),
+                               shape[:1] + (hi,) + shape[2:])
+    up = ops.unpack(x, lo_buf, hi_buf)
+    rup = ref.unpack(x, lo_buf, hi_buf, 1)
+    np.testing.assert_allclose(np.asarray(up), np.asarray(rup))
+
+
+@pytest.mark.parametrize("shape,c", [((2, 5, 5, 5, 16), 16),
+                                     ((4, 7, 3, 3, 32), 32),
+                                     ((1, 128, 8), 8)])
+@pytest.mark.parametrize("slope", [0.01, 1.0])
+def test_bn_act_kernel(shape, c, slope):
+    from repro.kernels.bn_act import ops, ref
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    x = jax.random.normal(ks[0], shape)
+    mean = jax.random.normal(ks[1], (c,))
+    var = jax.nn.softplus(jax.random.normal(ks[2], (c,)))
+    scale = jax.random.normal(ks[3], (c,))
+    bias = jax.random.normal(ks[4], (c,))
+    got = ops.bn_leaky_relu(x, mean, var, scale, bias, negative_slope=slope)
+    want = ref.bn_leaky_relu(x, mean, var, scale, bias,
+                             negative_slope=slope)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("L,H,P,N,chunk", [
+    (32, 2, 8, 16, 8), (64, 3, 8, 16, 16), (64, 1, 16, 8, 64),
+    (48, 2, 4, 4, 12),
+])
+def test_ssd_scan_kernel(L, H, P, N, chunk):
+    from repro.kernels.ssd_scan import ops, ref
+    B = 2
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    x = jax.random.normal(ks[0], (B, L, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, L, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    Bm = jax.random.normal(ks[3], (B, L, N))
+    Cm = jax.random.normal(ks[4], (B, L, N))
+    y, s = ops.ssd_scan(x, dt, A, Bm, Cm, chunk=chunk)
+    y_ref, s_ref = ref.ssd_scan(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref),
+                               rtol=3e-4, atol=3e-4)

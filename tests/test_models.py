@@ -1,0 +1,138 @@
+"""Model-level behaviour: forward/loss/grad finiteness, decode==forward
+(teacher forcing), prefill==forward, for every architecture family."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import HybridConfig, SSMConfig, TransformerConfig
+from repro.models import ssm_lm, transformer as T
+
+
+def mk(name, **kw):
+    base = dict(name=name, family="dense", num_layers=2, d_model=64,
+                num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=97)
+    base.update(kw)
+    return TransformerConfig(**base)
+
+
+CASES = [
+    mk("dense"),
+    mk("qwen-like", qkv_bias=True, num_kv_heads=4, tie_embeddings=True),
+    mk("gemma-like", alt_local_global=True, sliding_window=16,
+       logit_softcap=30.0, attn_softcap=50.0),
+    mk("moe-like", family="moe", num_experts=4, top_k=2),
+    mk("arctic-like", family="moe", num_experts=4, top_k=2,
+       moe_dense_residual=True, dense_residual_d_ff=64),
+    mk("encoder-like", family="audio", causal=False, gated_mlp=False,
+       activation="gelu", embed_inputs=False, supports_decode=False),
+]
+
+
+@pytest.mark.parametrize("cfg", CASES, ids=lambda c: c.name)
+def test_transformer_forward_loss_grad(cfg):
+    key = jax.random.PRNGKey(0)
+    p = T.init_params(key, cfg)
+    B, S = 2, 32
+    if cfg.embed_inputs:
+        toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                  cfg.vocab_size)
+    else:
+        toks = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model))
+    labels = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0,
+                                cfg.vocab_size)
+    logits, aux = T.forward(p, toks, cfg)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert np.all(np.isfinite(np.asarray(logits)))
+    batch = {"tokens": toks, "labels": labels}
+    loss = T.lm_loss(p, batch, cfg)
+    assert np.isfinite(float(loss))
+    g = jax.grad(lambda p: T.lm_loss(p, batch, cfg))(p)
+    for leaf in jax.tree.leaves(g):
+        assert np.all(np.isfinite(np.asarray(leaf)))
+
+
+@pytest.mark.parametrize("cfg", [mk("dense"),
+                                 mk("gemma-like", alt_local_global=True,
+                                    sliding_window=4, logit_softcap=30.0,
+                                    attn_softcap=50.0)],
+                         ids=lambda c: c.name)
+def test_decode_matches_forward(cfg):
+    key = jax.random.PRNGKey(0)
+    p = T.init_params(key, cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 8), 0,
+                              cfg.vocab_size)
+    full, _ = T.forward(p, toks, cfg)
+    cache = T.init_cache(cfg, 2, 16)
+    step = jax.jit(lambda p, c, t: T.decode_step(p, c, t, cfg))
+    for t in range(8):
+        lg, cache = step(p, cache, toks[:, t:t + 1])
+        np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, t]),
+                                   rtol=3e-4, atol=3e-4)
+
+
+def test_prefill_matches_forward():
+    cfg = mk("dense")
+    p = T.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 8), 0, 97)
+    full, _ = T.forward(p, toks, cfg)
+    lg, cache = T.prefill(p, toks, cfg, max_len=16)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, -1]),
+                               rtol=3e-4, atol=3e-4)
+    # continue decoding from the prefilled cache
+    lg2, cache = T.decode_step(p, cache, toks[:, :1], cfg)
+    assert lg2.shape == (2, 97)
+
+
+SSM_CASES = [
+    SSMConfig(name="ssm", family="ssm", num_layers=3, d_model=64,
+              ssm_state=16, vocab_size=97, head_dim=16, chunk_size=8),
+    HybridConfig(name="hybrid", family="hybrid", num_layers=5, d_model=64,
+                 ssm_state=16, vocab_size=97, num_heads=4, num_kv_heads=2,
+                 d_ff=128, attn_every=2, head_dim=16, chunk_size=8),
+]
+
+
+@pytest.mark.parametrize("cfg", SSM_CASES, ids=lambda c: c.name)
+def test_ssm_decode_matches_forward(cfg):
+    p = ssm_lm.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, 97)
+    logits = ssm_lm.forward(p, toks, cfg)
+    loss = ssm_lm.lm_loss(p, {"tokens": toks, "labels": toks}, cfg)
+    assert np.isfinite(float(loss))
+    cache = ssm_lm.init_cache(cfg, 2, 16)
+    step = jax.jit(lambda p, c, t: ssm_lm.decode_step(p, c, t, cfg))
+    for t in range(8):
+        lg, cache = step(p, cache, toks[:, t:t + 1])
+        np.testing.assert_allclose(np.asarray(lg), np.asarray(logits[:, t]),
+                                   rtol=5e-4, atol=5e-4)
+
+
+def test_vlm_forward_with_image_prefix():
+    cfg = mk("vlm-like", family="vlm")
+    p = T.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, 97)
+    img = jax.random.normal(jax.random.PRNGKey(2), (2, 8, cfg.d_model)) * 0.02
+    logits, _ = T.forward(p, toks, cfg, extra_embeds=img)
+    assert logits.shape == (2, 24, 97)
+    loss = T.lm_loss(p, {"tokens": toks, "labels": toks,
+                         "image_embeds": img}, cfg)
+    assert np.isfinite(float(loss))
+
+
+def test_scan_unroll_and_remat_match_rolled():
+    from repro.core import flags
+    cfg = mk("dense")
+    p = T.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, 97)
+    base, _ = T.forward(p, toks, cfg)
+    with flags.flags(scan_unroll=True, remat=True):
+        alt, _ = T.forward(p, toks, cfg)
+        g = jax.grad(lambda p: T.lm_loss(
+            p, {"tokens": toks, "labels": toks}, cfg))(p)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(alt),
+                               rtol=2e-5, atol=2e-5)
+    for leaf in jax.tree.leaves(g):
+        assert np.all(np.isfinite(np.asarray(leaf)))
