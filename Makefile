@@ -1,0 +1,12 @@
+.PHONY: verify test bench
+
+# Per-PR gate: tier-1 tests + kernel perf smoke (scripts/verify.sh).
+verify:
+	bash scripts/verify.sh
+
+test:
+	PYTHONPATH=src python -m pytest -x -q
+
+# Full benchmark sweep; BENCH_OUT captures the per-PR perf trajectory.
+bench:
+	PYTHONPATH=src python -m benchmarks.run $(if $(BENCH_OUT),--json $(BENCH_OUT),)

@@ -13,6 +13,8 @@ import tempfile
 
 import jax
 import jax.numpy as jnp
+
+from repro.core import compat
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
@@ -31,8 +33,7 @@ def main():
     args = ap.parse_args()
 
     cfg = configs.get_smoke_config("cosmoflow-512")  # 32^3 reduced variant
-    mesh = jax.make_mesh((args.data, args.model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((args.data, args.model), ("data", "model"))
     print(f"mesh: {mesh.shape}; model: {cfg.name} "
           f"({cfg.param_count()/1e3:.0f}k params)")
 

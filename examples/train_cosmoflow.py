@@ -17,6 +17,8 @@ import time
 
 import jax
 import jax.numpy as jnp
+
+from repro.core import compat
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
@@ -53,8 +55,7 @@ def main():
 
     cfg = big_config(args.width)
     print(f"model {cfg.name}: {cfg.param_count()/1e6:.1f}M params")
-    mesh = jax.make_mesh((args.data, args.model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((args.data, args.model), ("data", "model"))
 
     with tempfile.TemporaryDirectory() as d:
         n = args.num_train

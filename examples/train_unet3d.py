@@ -11,6 +11,8 @@ import tempfile
 
 import jax
 import jax.numpy as jnp
+
+from repro.core import compat
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
@@ -30,8 +32,7 @@ def main():
     args = ap.parse_args()
 
     cfg = configs.get_smoke_config("unet3d-256")
-    mesh = jax.make_mesh((args.data, args.model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((args.data, args.model), ("data", "model"))
     print(f"{cfg.name}: {cfg.param_count()/1e3:.0f}k params, "
           f"mesh {dict(mesh.shape)}")
 

@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# Per-PR verification: tier-1 tests + kernel perf smoke.
+#
+#   make verify            # or: bash scripts/verify.sh
+#   BENCH_OUT=BENCH_PR_N.json make verify   # also capture the bench rows
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 pytest =="
+python -m pytest -x -q
+
+echo "== kernel perf smoke =="
+if [ -n "${BENCH_OUT:-}" ]; then
+    python -m benchmarks.run --quick --only kernels --json "$BENCH_OUT"
+else
+    python -m benchmarks.run --quick --only kernels
+fi
+
+echo "verify: OK"

@@ -7,6 +7,10 @@
 * ``remat``: wrap each layer body in ``jax.checkpoint`` (recompute
   activations in backward) — the standard memory/compute trade; without it
   the 4k-train shapes hold every layer's activations live.
+* ``overlap_halo``: lower distributed convs via the interior/boundary
+  decomposition with packed halo exchange (DESIGN.md §3) instead of the
+  blocking exchange-concat-conv. On by default; the blocking path remains
+  as the equivalence oracle (``conv3d(..., overlap=False)``).
 """
 from __future__ import annotations
 
@@ -14,7 +18,7 @@ import contextlib
 
 _STATE = {"scan_unroll": False, "remat": False,
           "ep_alltoall": True, "seq_shard_acts": False,
-          "tp_shardmap_attn": False}
+          "tp_shardmap_attn": False, "overlap_halo": True}
 
 
 def get(name: str) -> bool:

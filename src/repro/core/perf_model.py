@@ -97,8 +97,17 @@ def unet_layers(cfg: ConvNetConfig) -> List[ConvLayer]:
 
 
 def _layer_fp_time(hw: Hardware, l: ConvLayer, ways: int,
-                   per_gpu_batch: float) -> Tuple[float, float]:
-    """Returns (fp_time, comp_time_only) for one forward conv."""
+                   per_gpu_batch: float,
+                   overlap: bool = True) -> Tuple[float, float]:
+    """Returns (fp_time, comp_time_only) for one forward conv.
+
+    ``overlap=True`` is the paper's model — the halo transfer hides behind
+    the interior compute: ``max{Comp(D_main), halo} + Comp(D_halo)``.
+    ``overlap=False`` models the serialized exchange-then-conv lowering
+    (the repo's legacy blocking path): ``Comp(D_main) + halo + Comp(D_halo)``
+    — the two modes bracket what the runtime can do, and their gap is the
+    predicted win of the interior/boundary decomposition.
+    """
     out_w = l.width // l.stride
     local_vox = out_w ** 3 / max(ways, 1)
     flops = 2 * l.kernel ** 3 * l.cin * l.cout * out_w ** 3 / max(ways, 1) \
@@ -114,7 +123,10 @@ def _layer_fp_time(hw: Hardware, l: ConvLayer, ways: int,
             * (l.width // l.stride) ** 2 * max(l.kernel - l.stride, 0) \
             * per_gpu_batch
         comp_halo = halo_flops / (hw.peak_flops * _eff(hw, int(local_vox)))
-        fp = max(comp_main, halo_time) + comp_halo
+        if overlap:
+            fp = max(comp_main, halo_time) + comp_halo
+        else:
+            fp = comp_main + halo_time + comp_halo
     else:
         fp = comp_main
     return fp, comp_main
@@ -127,6 +139,7 @@ def iteration_time(
     num_gpus: int,
     ways: int,            # spatial partitioning (depth)
     global_batch: int,
+    overlap: bool = True,  # False: serialized halo (blocking lowering)
 ) -> Dict[str, float]:
     """Predicted seconds per training iteration (paper Eq. Cost)."""
     layers = (cosmoflow_layers(cfg) if cfg.arch == "cosmoflow"
@@ -135,7 +148,8 @@ def iteration_time(
     per_gpu_batch = global_batch / groups
     fp_total, bp_total = 0.0, 0.0
     for l in layers:
-        fp, comp = _layer_fp_time(hw, l, ways, per_gpu_batch)
+        fp, comp = _layer_fp_time(hw, l, ways, per_gpu_batch,
+                                  overlap=overlap)
         fp_total += fp
         # BD + BF ~ 2x the forward cost, same halo structure
         bp_total += 2 * fp

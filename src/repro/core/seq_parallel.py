@@ -23,6 +23,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.core import compat
 from repro.core.halo import _shift_perm
 from repro.models.layers import chunked_attention
 
@@ -32,7 +33,7 @@ def _gather_prev_shards(x: jax.Array, axis_name: str, hops: int, dim: int):
 
     Returns concat([x_{i-hops}, ..., x_{i-1}], dim); out-of-range ranks
     contribute zeros (masked later via negative positions)."""
-    n = lax.axis_size(axis_name)
+    n = compat.axis_size(axis_name)
     blocks = []
     buf = x
     for _ in range(hops):
@@ -88,9 +89,8 @@ def cp_attention(
         )
 
     spec = P(None, axis, None, None)
-    return jax.shard_map(
+    return compat.shard_map(
         local, mesh=mesh, in_specs=(spec, spec, spec), out_specs=spec,
-        check_vma=False,
     )(q, k, v)
 
 
@@ -136,9 +136,9 @@ def tp_attention(
 
     q_spec = P(da, None, axis, None)
     kv_spec = P(da, None, None, None)  # kv heads replicated (GQA Hkv <= n)
-    return jax.shard_map(
+    return compat.shard_map(
         local, mesh=mesh, in_specs=(q_spec, kv_spec, kv_spec),
-        out_specs=q_spec, check_vma=False,
+        out_specs=q_spec,
     )(q, k, v)
 
 
@@ -188,12 +188,11 @@ def cp_ssd(
         )
         return y + corr.astype(y.dtype)
 
-    return jax.shard_map(
+    return compat.shard_map(
         local, mesh=mesh,
         in_specs=(P(None, axis, None, None), P(None, axis, None),
                   P(None, axis, None), P(None, axis, None)),
         out_specs=P(None, axis, None, None),
-        check_vma=False,
     )(x, dt, Bm, Cm)
 
 
@@ -223,10 +222,9 @@ def cache_update_sharded(
         return jnp.where(in_range, upd, c)
 
     spec = P(None, axis, None, None)
-    return jax.shard_map(
+    return compat.shard_map(
         local, mesh=mesh,
         in_specs=(spec, P(None, None, None, None)), out_specs=spec,
-        check_vma=False,
     )(cache, new)
 
 
@@ -288,9 +286,8 @@ def decode_attention_sharded_kv(
         return jnp.moveaxis(out, 3, 1).reshape(B, 1, H, hd).astype(q.dtype)
 
     spec_kv = P(None, axis, None, None)
-    return jax.shard_map(
+    return compat.shard_map(
         local, mesh=mesh,
         in_specs=(P(None, None, None, None), spec_kv, spec_kv),
         out_specs=P(None, None, None, None),
-        check_vma=False,
     )(q, k_cache, v_cache)

@@ -3,7 +3,23 @@
 The paper's hybrid-parallel 3D CNN primitive: activations are laid out
 NDHWC with the **depth** dimension (optionally also H, W) partitioned over
 named mesh axes. Each op is written in "local shard + explicit halo
-exchange" style and is meant to be called inside ``jax.shard_map``.
+exchange" style and is meant to be called inside ``shard_map``.
+
+``conv3d`` has two lowerings, selected by the ``overlap_halo`` flag
+(``core/flags.py``) or per-call via ``overlap=``:
+
+* blocking (the reference oracle): exchange halos, concatenate them onto
+  the local block, run one conv — every MXU cycle waits on the collective.
+* overlapped (default, DESIGN.md §3): split the local output into an
+  *interior* region whose input windows live entirely on this shard and
+  thin *boundary* slabs that need remote rows. The packed halo sends are
+  issued first, the interior conv is traced next with **no data
+  dependence** on the collective, and the boundary convs + output stitch
+  come last — the structure the paper's perf model assumes:
+  ``FP_l = max{Comp_l(D_main), Σ_d 2·SR(D_halo_d)} + Comp_l(D_halo)``.
+
+Both lowerings compute each output row from the identical input window, so
+they agree to float-accumulation order (tests pin ≤1e-5).
 
 Layout: NDHWC (channel-minor — TPU-friendly; contrast with the paper's
 cuDNN NCDHW). The partitioned dims are identified by mesh-axis names in a
@@ -12,12 +28,14 @@ cuDNN NCDHW). The partitioned dims are identified by mesh-axis names in a
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core import compat
+from repro.core import flags
 from repro.core import halo as halo_lib
 
 # Dimension indices in NDHWC.
@@ -40,25 +58,10 @@ class SpatialPartitioning:
         return [(d, a) for d, a in enumerate(self.axes) if a is not None]
 
 
-def conv3d(
-    x: jax.Array,
-    w: jax.Array,
-    part: SpatialPartitioning,
-    stride: int = 1,
-    use_pallas: bool = False,
-) -> jax.Array:
-    """SAME-padded distributed 3D conv. x: (N, D, H, W, Cin) local shard;
-    w: (k, k, k, Cin, Cout) replicated."""
-    k = w.shape[0]
-    lo, hi = halo_lib.conv_halo_widths(k, stride)
-    pads = []
-    for d in range(3):
-        axis = part.axes[d]
-        if axis is None:
-            pads.append((lo, hi))  # plain zero padding, unsharded dim
-        else:
-            x = halo_lib.halo_exchange(x, axis, _SPATIAL_DIMS[d], lo, hi)
-            pads.append((0, 0))
+def _conv_piece(x: jax.Array, w: jax.Array, stride: int,
+                pads: Sequence[Tuple[int, int]],
+                use_pallas: bool) -> jax.Array:
+    """One local VALID-after-padding conv call (XLA or the Pallas kernel)."""
     if use_pallas:
         from repro.kernels.conv3d import ops as conv_ops
 
@@ -71,9 +74,117 @@ def conv3d(
         x,
         w,
         window_strides=(stride,) * 3,
-        padding=pads,
+        padding=list(pads),
         dimension_numbers=("NDHWC", "DHWIO", "NDHWC"),
     )
+
+
+def _conv3d_blocking(x, w, part, stride, use_pallas):
+    """Reference oracle: exchange-concat-then-conv (fully serialized)."""
+    k = w.shape[0]
+    lo, hi = halo_lib.conv_halo_widths(k, stride)
+    pads = []
+    for d in range(3):
+        axis = part.axes[d]
+        if axis is None:
+            pads.append((lo, hi))  # plain zero padding, unsharded dim
+        else:
+            x = halo_lib.halo_exchange(x, axis, _SPATIAL_DIMS[d], lo, hi)
+            pads.append((0, 0))
+    return _conv_piece(x, w, stride, pads, use_pallas)
+
+
+def _conv3d_overlap(x, w, part, stride, use_pallas):
+    """Interior/boundary decomposition with packed halo exchange.
+
+    The last partitioned dim is decomposed: its halo sends are issued
+    first, the interior conv (no remote data) is traced before the slabs
+    are consumed, and the two boundary convs + a concat stitch the output.
+    Any *earlier* partitioned dims are exchanged up front (packed, minimal
+    ppermutes) and concatenated, so the decomposed dim's boundary slabs
+    carry the corner halos they need — the paper's configs partition depth
+    only, where the single exchange is fully overlapped.
+    """
+    k = w.shape[0]
+    s = stride
+    lo, hi = halo_lib.conv_halo_widths(k, s)
+    active = list(part.active)
+    pads: List[Tuple[int, int]] = [
+        (0, 0) if part.axes[d] is not None else (lo, hi) for d in range(3)]
+
+    for d, axis in active[:-1]:
+        slabs = halo_lib.start_halo_exchange(
+            x, axis, _SPATIAL_DIMS[d], lo, hi, use_pallas=use_pallas)
+        x = halo_lib.unpack_halo(x, slabs, _SPATIAL_DIMS[d],
+                                 use_pallas=use_pallas)
+
+    d, axis = active[-1]
+    dim = _SPATIAL_DIMS[d]
+    # Comm first: nothing below depends on `slabs` until the boundary convs.
+    slabs = halo_lib.start_halo_exchange(x, axis, dim, lo, hi,
+                                         use_pallas=use_pallas)
+
+    D = x.shape[dim]
+    n_out = (D + lo + hi - k) // s + 1
+    n_lo = -(-lo // s)                       # outputs needing the lo slab
+    n_hi = n_out - 1 - (D - k + lo) // s     # outputs needing the hi slab
+    if n_lo + n_hi >= n_out:
+        # Local width too small to hold an interior region (deep layers of
+        # an over-decomposed model): fall back to one conv over the stitched
+        # block — the packed exchange above still minimizes the ppermutes.
+        return _conv_piece(halo_lib.unpack_halo(x, slabs, dim,
+                                                use_pallas=use_pallas),
+                           w, s, pads, use_pallas)
+
+    # Interior: windows [o*s - lo, o*s - lo + k) for o in [n_lo, n_out-n_hi)
+    # lie entirely inside the local block.
+    int_lo = n_lo * s - lo
+    int_hi = (n_out - n_hi - 1) * s - lo + k
+    out_int = _conv_piece(lax.slice_in_dim(x, int_lo, int_hi, axis=dim),
+                          w, s, pads, use_pallas)
+
+    outs = []
+    if n_lo > 0:
+        x_lo = jnp.concatenate(
+            [slabs.lo,
+             lax.slice_in_dim(x, 0, (n_lo - 1) * s - lo + k, axis=dim)],
+            axis=dim)
+        outs.append(_conv_piece(x_lo, w, s, pads, use_pallas))
+    outs.append(out_int)
+    if n_hi > 0:
+        x_hi = jnp.concatenate(
+            [lax.slice_in_dim(x, (n_out - n_hi) * s - lo, D, axis=dim),
+             slabs.hi],
+            axis=dim)
+        outs.append(_conv_piece(x_hi, w, s, pads, use_pallas))
+    return jnp.concatenate(outs, axis=dim) if len(outs) > 1 else outs[0]
+
+
+def conv3d(
+    x: jax.Array,
+    w: jax.Array,
+    part: SpatialPartitioning,
+    stride: int = 1,
+    use_pallas: bool = False,
+    overlap: Optional[bool] = None,
+) -> jax.Array:
+    """SAME-padded distributed 3D conv. x: (N, D, H, W, Cin) local shard;
+    w: (k, k, k, Cin, Cout) replicated.
+
+    ``overlap=None`` reads the process-wide ``overlap_halo`` flag;
+    ``True``/``False`` force the overlapped or blocking lowering.
+    """
+    if overlap is None:
+        overlap = flags.get("overlap_halo")
+    k = w.shape[0]
+    lo, hi = halo_lib.conv_halo_widths(k, stride)
+    if not overlap or not part.active or (lo == 0 and hi == 0):
+        return _conv3d_blocking(x, w, part, stride, use_pallas)
+    if all(compat.axis_size(a) == 1 for _, a in part.active):
+        # Degenerate meshes (1-way axes) have no collective to hide: the
+        # 3-conv decomposition would be pure dispatch overhead.
+        return _conv3d_blocking(x, w, part, stride, use_pallas)
+    return _conv3d_overlap(x, w, part, stride, use_pallas)
 
 
 def deconv3d(
@@ -101,15 +212,26 @@ def maxpool3d(
     part: SpatialPartitioning,
     window: int = 2,
     stride: int = 2,
+    overlap: Optional[bool] = None,
 ) -> jax.Array:
     """Distributed max pooling. For window == stride (the paper's pooling)
-    no halo is required when local widths divide the stride."""
+    no halo is required when local widths divide the stride. When a halo IS
+    needed, the ``overlap_halo`` flag selects the packed exchange (minimal
+    ppermutes) over the legacy blocking one; pooling is too cheap to be
+    worth an interior/boundary split."""
+    if overlap is None:
+        overlap = flags.get("overlap_halo")
     lo, hi = halo_lib.conv_halo_widths(window, stride)
     pads = []
     for d in range(3):
         axis = part.axes[d]
         if axis is None or (lo == 0 and hi == 0):
             pads.append((lo, hi))
+        elif overlap:
+            slabs = halo_lib.start_halo_exchange(
+                x, axis, _SPATIAL_DIMS[d], lo, hi)
+            x = halo_lib.unpack_halo(x, slabs, _SPATIAL_DIMS[d])
+            pads.append((0, 0))
         else:
             x = halo_lib.halo_exchange(x, axis, _SPATIAL_DIMS[d], lo, hi)
             pads.append((0, 0))

@@ -1,4 +1,12 @@
-"""jit wrappers for halo pack/unpack."""
+"""jit wrappers for halo pack/unpack.
+
+Both entry points are live in the runtime halo path (DESIGN.md §3):
+``core/halo.py`` calls ``pack`` to extract the two send faces in one fused
+pass inside ``start_halo_exchange`` (the overlapped conv), and ``unpack``
+to stitch received slabs onto the local block when a conv falls back to
+the undecomposed lowering — both under ``use_pallas=True``, threaded from
+the models through ``spatial_conv.conv3d``.
+"""
 from __future__ import annotations
 
 import functools
@@ -12,9 +20,12 @@ _INTERPRET = jax.default_backend() != "tpu"
 
 @functools.partial(jax.jit, static_argnames=("lo", "hi"))
 def pack(x: jax.Array, lo: int, hi: int):
+    """(N,D,H,W,C) -> (lo_face = leading ``hi`` rows, sent to the previous
+    rank; hi_face = trailing ``lo`` rows, sent to the next rank)."""
     return pack_depth(x, lo, hi, interpret=_INTERPRET)
 
 
 @jax.jit
 def unpack(x: jax.Array, lo_buf: jax.Array, hi_buf: jax.Array):
+    """One fused write of [lo_buf | x | hi_buf] along depth."""
     return unpack_depth(x, lo_buf, hi_buf, interpret=_INTERPRET)

@@ -13,6 +13,8 @@ import time  # noqa: E402
 
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
+
+from repro.core import compat
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from repro import configs  # noqa: E402
@@ -33,9 +35,8 @@ def run(arch="cosmoflow-512", gb=64):
     cfg = configs.get_config(arch)
     results = []
     for name, (shape, axes, spatial) in VARIANTS.items():
-        mesh = jax.make_mesh(
-            shape, axes,
-            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+        mesh = compat.make_mesh(
+            shape, axes)
         opt = Adam(lr=constant(1e-4))
         step = make_convnet_train_step(
             cfg, mesh, opt, spatial_axes=tuple(spatial) if len(spatial) == 3
@@ -57,7 +58,7 @@ def run(arch="cosmoflow-512", gb=64):
                                  sharding=NamedSharding(mesh, P("data")))
         seed = jax.ShapeDtypeStruct((), jnp.int32)
         t0 = time.time()
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             lowered = jax.jit(step).lower(params, opt_sds, x, y, seed)
             compiled = lowered.compile()
         rl = roofline.analyze(

@@ -25,6 +25,7 @@ import jax.numpy as jnp  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from repro import configs  # noqa: E402
+from repro.core import compat  # noqa: E402
 from repro.configs.base import (  # noqa: E402
     INPUT_SHAPES, ConvNetConfig, HybridConfig, SSMConfig, TransformerConfig,
 )
@@ -188,7 +189,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
         with flags.flags(scan_unroll=unroll, remat=remat,
                          seq_shard_acts=seq_acts,
                          tp_shardmap_attn=big_tp):
-            with jax.set_mesh(mesh):
+            with compat.set_mesh(mesh):
                 lowered = jax.jit(fn).lower(*args)
                 return lowered, lowered.compile(), policy
 
@@ -201,17 +202,17 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
     red = reduced_layer_configs(cfg)
     if red is None:
         _, c_full, _ = compile_one(cfg, unroll=True)
-        flops = float(c_full.cost_analysis().get("flops", 0.0))
-        byts = float(c_full.cost_analysis().get("bytes accessed", 0.0))
+        flops = float(compat.cost_analysis(c_full).get("flops", 0.0))
+        byts = float(compat.cost_analysis(c_full).get("bytes accessed", 0.0))
         coll = roofline.collective_bytes(c_full.as_text())
     else:
         c1cfg, c2cfg, n_periods = red
         _, e1, _ = compile_one(c1cfg, unroll=True)
         _, e2, _ = compile_one(c2cfg, unroll=True)
-        f1 = float(e1.cost_analysis().get("flops", 0.0))
-        f2 = float(e2.cost_analysis().get("flops", 0.0))
-        b1 = float(e1.cost_analysis().get("bytes accessed", 0.0))
-        b2 = float(e2.cost_analysis().get("bytes accessed", 0.0))
+        f1 = float(compat.cost_analysis(e1).get("flops", 0.0))
+        f2 = float(compat.cost_analysis(e2).get("flops", 0.0))
+        b1 = float(compat.cost_analysis(e1).get("bytes accessed", 0.0))
+        b2 = float(compat.cost_analysis(e2).get("bytes accessed", 0.0))
         k1 = roofline.collective_bytes(e1.as_text())
         k2 = roofline.collective_bytes(e2.as_text())
         scale = n_periods - 1.0

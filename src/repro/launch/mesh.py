@@ -9,19 +9,20 @@ from __future__ import annotations
 
 import jax
 
+from repro.core import compat
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(
+        shape, axes)
 
 
 def make_local_mesh(model: int = 1, data: int = 1):
     """Mesh over however many (possibly forced-host) devices exist."""
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat.make_mesh(
+        (data, model), ("data", "model"))
 
 
 # TPU v5e hardware constants for the roofline analysis (per chip).

@@ -16,6 +16,7 @@ import dataclasses
 import re
 from typing import Dict, Optional
 
+from repro.core import compat
 from repro.launch.mesh import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
 
 _DTYPE_BYTES = {
@@ -114,7 +115,7 @@ class Roofline:
 
 def analyze(compiled, lowered_text: str, *, arch: str, shape: str,
             mesh_name: str, chips: int, model_flops: float) -> Roofline:
-    ca = compiled.cost_analysis()
+    ca = compat.cost_analysis(compiled)
     ma = compiled.memory_analysis()
     coll = collective_bytes(compiled.as_text())
     return Roofline(

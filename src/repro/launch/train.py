@@ -14,6 +14,8 @@ import time
 
 import jax
 import jax.numpy as jnp
+
+from repro.core import compat
 import numpy as np
 
 from repro import configs
@@ -47,8 +49,7 @@ def main():
     mesh = None
     policy = NO_POLICY
     if args.data * args.model > 1:
-        mesh = jax.make_mesh((args.data, args.model), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = compat.make_mesh((args.data, args.model), ("data", "model"))
         policy = ShardingPolicy(mesh=mesh, plan=args.plan)
     is_ssm = isinstance(cfg, (SSMConfig, HybridConfig))
     mod = ssm_lm if is_ssm else transformer

@@ -87,6 +87,7 @@ def forward(
     dropout_rng: Optional[jax.Array] = None,
     sample_ids: Optional[jax.Array] = None,  # global ids of local samples
     use_pallas: bool = False,
+    overlap: Optional[bool] = None,  # None -> flags.get("overlap_halo")
 ) -> jax.Array:
     """x: local shard (N_loc, D_loc, H_loc, W_loc, Cin) -> (N_loc, out_dim).
 
@@ -113,7 +114,7 @@ def forward(
         part = SpatialPartitioning(tuple(axes))
         stride = 2 if i == 3 else 1  # block 4 (0-indexed 3) is the strided conv
         h = conv3d(h, params[f"conv{i}_w"], part, stride=stride,
-                   use_pallas=use_pallas)
+                   use_pallas=use_pallas, overlap=overlap)
         if cfg.batchnorm:
             h = dist_norm.distributed_batchnorm(
                 h, params[f"bn{i}_scale"], params[f"bn{i}_bias"], bn_axes,
@@ -122,7 +123,7 @@ def forward(
         if i == 3:
             w //= 2
         if i < npool:
-            h = maxpool3d(h, part, window=2, stride=2)
+            h = maxpool3d(h, part, window=2, stride=2, overlap=overlap)
             w //= 2
     # CNN -> FC transition: gather the (tiny) 2^3 x C activation.
     h = spatial_allgather(h, part)
@@ -166,6 +167,7 @@ def mse_loss(
     dropout_rng: Optional[jax.Array] = None,
     sample_ids: Optional[jax.Array] = None,
     use_pallas: bool = False,
+    overlap: Optional[bool] = None,
 ) -> jax.Array:
     """LOCAL loss contribution, normalized so that ``psum`` over ALL mesh
     axes yields the global mean loss *and* correct grads.
@@ -180,7 +182,7 @@ def mse_loss(
         params, x, cfg, part, bn_axes=bn_axes, train=train,
         spatial_shards=spatial_shards,
         dropout_rng=dropout_rng, sample_ids=sample_ids,
-        use_pallas=use_pallas,
+        use_pallas=use_pallas, overlap=overlap,
     )
     n_global = global_batch or x.shape[0]
     per_sample = jnp.mean(jnp.square(pred - y), axis=-1)

@@ -18,6 +18,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import compat
 from repro.core.sharding import ShardingPolicy, NO_POLICY
 from repro.models.layers import dense_init
 
@@ -128,12 +129,11 @@ def moe_ffn_ep(
         out = _combine_local(out_buf, se, st, sw, pos_c, keep, T, x.dtype)
         return out.reshape(Bl, Sl, D), aux.astype(x.dtype)
 
-    return jax.shard_map(
+    return compat.shard_map(
         local, mesh=mesh,
         in_specs=(P(da, m, None), P(), P(m, None, None), P(m, None, None),
                   P(m, None, None)),
         out_specs=(P(da, m, None), P()),
-        check_vma=False,
     )(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
 
 

@@ -11,7 +11,7 @@ spatially-sharded labels.
 from __future__ import annotations
 
 import math
-from typing import Dict, Sequence
+from typing import Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -71,8 +71,8 @@ def init_params(key: jax.Array, cfg: ConvNetConfig, dtype=jnp.float32) -> Params
     return params
 
 
-def _conv_bn_relu(h, w, s, b, part, bn_axes, use_pallas):
-    h = conv3d(h, w, part, stride=1, use_pallas=use_pallas)
+def _conv_bn_relu(h, w, s, b, part, bn_axes, use_pallas, overlap=None):
+    h = conv3d(h, w, part, stride=1, use_pallas=use_pallas, overlap=overlap)
     h = dist_norm.distributed_batchnorm(h, s, b, bn_axes)
     return jax.nn.relu(h)
 
@@ -85,29 +85,34 @@ def forward(
     *,
     bn_axes: Sequence[str] = (),
     use_pallas: bool = False,
+    overlap: Optional[bool] = None,  # None -> flags.get("overlap_halo")
 ) -> jax.Array:
     """x: (N_loc, D_loc, H_loc, W_loc, Cin) -> per-voxel logits (..., out_dim)."""
     h = x
     skips = []
     for lvl in range(cfg.depth):
         h = _conv_bn_relu(h, params[f"enc{lvl}_w0"], params[f"enc{lvl}_s0"],
-                          params[f"enc{lvl}_b0"], part, bn_axes, use_pallas)
+                          params[f"enc{lvl}_b0"], part, bn_axes, use_pallas,
+                          overlap)
         h = _conv_bn_relu(h, params[f"enc{lvl}_w1"], params[f"enc{lvl}_s1"],
-                          params[f"enc{lvl}_b1"], part, bn_axes, use_pallas)
+                          params[f"enc{lvl}_b1"], part, bn_axes, use_pallas,
+                          overlap)
         skips.append(h)
-        h = maxpool3d(h, part, window=2, stride=2)
+        h = maxpool3d(h, part, window=2, stride=2, overlap=overlap)
     h = _conv_bn_relu(h, params["mid_w0"], params["mid_s0"], params["mid_b0"],
-                      part, bn_axes, use_pallas)
+                      part, bn_axes, use_pallas, overlap)
     h = _conv_bn_relu(h, params["mid_w1"], params["mid_s1"], params["mid_b1"],
-                      part, bn_axes, use_pallas)
+                      part, bn_axes, use_pallas, overlap)
     for lvl in reversed(range(cfg.depth)):
         h = deconv3d(h, params[f"dec{lvl}_up"], part, stride=2)
         h = jnp.concatenate([skips[lvl], h], axis=-1)
         h = _conv_bn_relu(h, params[f"dec{lvl}_w0"], params[f"dec{lvl}_s0"],
-                          params[f"dec{lvl}_b0"], part, bn_axes, use_pallas)
+                          params[f"dec{lvl}_b0"], part, bn_axes, use_pallas,
+                          overlap)
         h = _conv_bn_relu(h, params[f"dec{lvl}_w1"], params[f"dec{lvl}_s1"],
-                          params[f"dec{lvl}_b1"], part, bn_axes, use_pallas)
-    return conv3d(h, params["head_w"], part, stride=1)
+                          params[f"dec{lvl}_b1"], part, bn_axes, use_pallas,
+                          overlap)
+    return conv3d(h, params["head_w"], part, stride=1, overlap=overlap)
 
 
 def segmentation_loss(
@@ -120,13 +125,14 @@ def segmentation_loss(
     bn_axes: Sequence[str] = (),
     global_voxels: int = 0,
     use_pallas: bool = False,
+    overlap: Optional[bool] = None,
 ) -> jax.Array:
     """LOCAL per-voxel CE contribution (sum over local voxels / global voxel
     count): ``psum`` over all mesh axes yields the global mean. Labels are
     spatially sharded like the input (the paper's point: ground truth is as
     large as the input and must be spatially distributed too)."""
     logits = forward(params, x, cfg, part, bn_axes=bn_axes,
-                     use_pallas=use_pallas)
+                     use_pallas=use_pallas, overlap=overlap)
     logp = jax.nn.log_softmax(logits, axis=-1)
     nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
     denom = global_voxels or nll.size

@@ -20,6 +20,7 @@ from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ConvNetConfig
+from repro.core import compat
 from repro.core.sharding import ShardingPolicy
 from repro.core.spatial_conv import SpatialPartitioning
 from repro.models import cosmoflow as cosmoflow_lib
@@ -36,6 +37,7 @@ def make_convnet_train_step(
     data_axes: Tuple[str, ...] = ("data",),
     global_batch: int,
     use_pallas: bool = False,
+    overlap: Optional[bool] = None,  # halo mode: None -> flags overlap_halo
     jit: bool = True,
 ):
     """Returns step(params, opt_state, x, y, rng) -> (params, opt, loss).
@@ -67,14 +69,16 @@ def make_convnet_train_step(
                     p, x, y, cfg, part, bn_axes=all_axes,
                     global_batch=global_batch, spatial_size=n_spatial,
                     spatial_shards=shards3, sample_ids=sample_ids,
-                    train=True, dropout_rng=rng, use_pallas=use_pallas)
+                    train=True, dropout_rng=rng, use_pallas=use_pallas,
+                    overlap=overlap)
         else:
             gv = global_batch * cfg.input_width ** 3
 
             def loss_fn(p):
                 return unet_lib.segmentation_loss(
                     p, x, y, cfg, part, bn_axes=all_axes,
-                    global_voxels=gv, use_pallas=use_pallas)
+                    global_voxels=gv, use_pallas=use_pallas,
+                    overlap=overlap)
 
         loss, grads = jax.value_and_grad(loss_fn)(params)
         grads = jax.tree.map(lambda g: lax.psum(g, all_axes), grads)
@@ -86,11 +90,10 @@ def make_convnet_train_step(
     x_spec = P(dspec, *spatial_axes, None)
     y_spec = (P(dspec, *spatial_axes) if cfg.arch == "unet3d"
               else P(dspec, None))
-    mapped = jax.shard_map(
+    mapped = compat.shard_map(
         local_step, mesh=mesh,
         in_specs=(P(), P(), x_spec, y_spec, P()),
         out_specs=(P(), P(), P()),
-        check_vma=False,
     )
     if not jit:
         return mapped
@@ -105,6 +108,7 @@ def make_convnet_eval_step(
     data_axes: Tuple[str, ...] = ("data",),
     global_batch: int,
     use_pallas: bool = False,
+    overlap: Optional[bool] = None,
 ):
     """Returns eval(params, x, y) -> (loss, preds) (cosmoflow only)."""
     part = SpatialPartitioning(tuple(spatial_axes))
@@ -119,18 +123,17 @@ def make_convnet_eval_step(
     def local_eval(params, x, y):
         pred = cosmoflow_lib.forward(
             params, x, cfg, part, bn_axes=all_axes, train=False,
-            spatial_shards=shards3, use_pallas=use_pallas)
+            spatial_shards=shards3, use_pallas=use_pallas, overlap=overlap)
         per = jnp.mean(jnp.square(pred - y), axis=-1)
         loss = lax.psum(jnp.sum(per) / (global_batch * n_spatial), all_axes)
         return loss, pred
 
     dspec = data_axes if len(data_axes) > 1 else data_axes[0]
     x_spec = P(dspec, *spatial_axes, None)
-    return jax.jit(jax.shard_map(
+    return jax.jit(compat.shard_map(
         local_eval, mesh=mesh,
         in_specs=(P(), x_spec, P(dspec, None)),
         out_specs=(P(), P(dspec, None)),
-        check_vma=False,
     ))
 
 

@@ -7,6 +7,8 @@ one serve_step against a small cache.
 """
 import jax
 import jax.numpy as jnp
+
+from repro.core import compat
 import numpy as np
 import pytest
 
@@ -86,8 +88,7 @@ def test_smoke_convnet_train_step(arch):
     from repro.train.train_step import make_convnet_train_step
     cfg = configs.get_smoke_config(arch)
     assert cfg.input_width <= 32
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
     opt = Adam(lr=constant(1e-3))
     gb = 2
     step = make_convnet_train_step(

@@ -4,6 +4,8 @@ import os
 
 import jax
 import jax.numpy as jnp
+
+from repro.core import compat
 import numpy as np
 import pytest
 
@@ -30,8 +32,7 @@ def test_spatial_parallel_loader_cache_and_counters(tmp_path):
     cubes, targets = synthetic.make_cosmology_dataset(4, 8, seed=1)
     store.write_dataset(str(tmp_path), cubes, targets)
     s = store.HyperslabStore(str(tmp_path))
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
     loader = pipeline.SpatialParallelLoader(
         s, mesh, P("data", "model", None, None, None), global_batch=2,
         seed=0)
@@ -56,8 +57,7 @@ def test_sample_parallel_baseline_reads_more(tmp_path):
     from jax.sharding import PartitionSpec as P
     cubes, targets = synthetic.make_cosmology_dataset(2, 8, seed=2)
     store.write_dataset(str(tmp_path), cubes, targets)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
     sp = pipeline.SampleParallelLoader(
         store.HyperslabStore(str(tmp_path)), mesh,
         P("data", "model", None, None, None), global_batch=2, seed=0)
