@@ -22,7 +22,8 @@ from repro import configs
 from repro.data import pipeline, store, synthetic
 from repro.models import cosmoflow
 from repro.optim.adam import Adam, linear_decay
-from repro.train.train_step import make_convnet_train_step
+from repro.train.train_step import (make_convnet_opt_state,
+                                    make_convnet_train_step)
 
 
 def main():
@@ -50,7 +51,8 @@ def main():
             cfg, mesh, opt, spatial_axes=("model", None, None),
             data_axes=("data",), global_batch=4)
         params = cosmoflow.init_params(jax.random.PRNGKey(0), cfg)
-        opt_state = opt.init(params)
+        opt_state = make_convnet_opt_state(cfg, opt, params,
+                                           mesh=mesh)
 
         order = loader.epoch_schedule()
         for i in range(args.steps):

@@ -29,6 +29,7 @@ from repro.models import cosmoflow
 from repro.optim.adam import Adam, linear_decay
 from repro.train import checkpoint
 from repro.train.train_step import (make_convnet_eval_step,
+                                    make_convnet_opt_state,
                                     make_convnet_train_step)
 
 
@@ -75,7 +76,8 @@ def main():
             cfg, mesh, spatial_axes=("model", None, None),
             data_axes=("data",), global_batch=8)
         params = cosmoflow.init_params(jax.random.PRNGKey(0), cfg)
-        opt_state = opt.init(params)
+        opt_state = make_convnet_opt_state(cfg, opt, params,
+                                           mesh=mesh)
 
         xe, ye = loader.load_batch(np.arange(n, n + 8))
         t0 = time.time()

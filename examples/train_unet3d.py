@@ -20,7 +20,8 @@ from repro import configs
 from repro.data import pipeline, store, synthetic
 from repro.models import unet3d
 from repro.optim.adam import Adam, linear_decay
-from repro.train.train_step import make_convnet_train_step
+from repro.train.train_step import (make_convnet_opt_state,
+                                    make_convnet_train_step)
 
 
 def main():
@@ -51,7 +52,8 @@ def main():
             cfg, mesh, opt, spatial_axes=("model", None, None),
             data_axes=("data",), global_batch=args.batch)
         params = unet3d.init_params(jax.random.PRNGKey(0), cfg)
-        opt_state = opt.init(params)
+        opt_state = make_convnet_opt_state(cfg, opt, params,
+                                           mesh=mesh)
         order = loader.epoch_schedule()
         for i in range(args.steps):
             ids = order[(i * args.batch) % 8:(i * args.batch) % 8

@@ -18,4 +18,26 @@ else
     python -m benchmarks.run --quick --only kernels
 fi
 
+echo "== grad-comm perf smoke =="
+GC_JSON="$(mktemp /tmp/grad_comm_smoke.XXXXXX.json)"
+python -m benchmarks.run --quick --only grad_comm --json "$GC_JSON"
+python - "$GC_JSON" <<'EOF'
+import json
+import sys
+
+rows = {r["name"]: r for r in json.load(open(sys.argv[1]))["rows"]}
+if "grad_comm.error" in rows:
+    sys.exit(f"grad_comm bench failed: {rows['grad_comm.error']['derived']}")
+mono = rows["grad_comm.micro.monolithic"]["us_per_call"]
+ov = rows["grad_comm.micro.overlap"]["us_per_call"]
+# regression gate: the overlapped lowering must not lose >10% to the
+# monolithic tail psum on the reduction micro (it typically WINS >1.3x).
+# explicit exit, not assert: asserts vanish under PYTHONOPTIMIZE.
+if ov > 1.10 * mono:
+    sys.exit(f"grad-comm overlap regressed: {ov:.0f}us vs monolithic "
+             f"{mono:.0f}us ({mono / ov:.2f}x)")
+print(f"grad-comm smoke OK: overlap {mono / ov:.2f}x vs monolithic")
+EOF
+rm -f "$GC_JSON"
+
 echo "verify: OK"

@@ -6,7 +6,7 @@ local (count, sum, sumsq) triple over every mesh axis that shards N/D/H/W.
 """
 from __future__ import annotations
 
-from typing import Sequence
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -20,9 +20,16 @@ def distributed_batchnorm(
     reduce_axes: Sequence[str],
     eps: float = 1e-5,
     use_pallas: bool = False,
+    activation_slope: Optional[float] = None,
 ) -> jax.Array:
     """BatchNorm over all dims but the channel (last) dim of a local shard,
-    psum-reducing statistics over ``reduce_axes`` mesh axes."""
+    psum-reducing statistics over ``reduce_axes`` mesh axes.
+
+    ``activation_slope`` folds the following leaky-ReLU (0.0 = ReLU) into
+    the normalize pass: one HBM round-trip instead of two, via the fused
+    ``kernels/bn_act`` Pallas kernel under ``use_pallas`` (the statistics
+    psum stays here — it is a cross-device reduction).
+    """
     reduce_dims = tuple(range(x.ndim - 1))
     n_local = 1
     for d in reduce_dims:
@@ -36,13 +43,17 @@ def distributed_batchnorm(
         n = lax.psum(n, ax)
     mean = s / n
     var = jnp.maximum(ss / n - jnp.square(mean), 0.0)
+    slope = 1.0 if activation_slope is None else activation_slope  # 1 = identity
     if use_pallas:
         from repro.kernels.bn_act import ops as bn_ops
 
         return bn_ops.bn_leaky_relu(x, mean, var, scale, bias, eps=eps,
-                                    negative_slope=1.0)  # slope 1 = identity act
-    inv = lax.rsqrt(var + eps)
-    return (x - mean) * (inv * scale) + bias
+                                    negative_slope=slope)
+    # the jnp oracle is also the fused kernel's VJP: single source of truth
+    from repro.kernels.bn_act import ref as bn_ref
+
+    return bn_ref.bn_leaky_relu(x, mean, var, scale, bias, eps=eps,
+                                negative_slope=slope)
 
 
 def distributed_mean(x: jax.Array, reduce_axes: Sequence[str]) -> jax.Array:

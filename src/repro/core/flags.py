@@ -11,6 +11,11 @@
   decomposition with packed halo exchange (DESIGN.md §3) instead of the
   blocking exchange-concat-conv. On by default; the blocking path remains
   as the equivalence oracle (``conv3d(..., overlap=False)``).
+* ``grad_comm``: gradient-reduction lowering for the conv-net train step
+  (DESIGN.md §4): ``"overlap"`` (default — per-layer bucketed reduction
+  hooks that fire during backward), ``"monolithic"`` (the tail tree-wide
+  psum, kept as the equivalence oracle), or ``"reduce_scatter"``
+  (ZeRO-1: psum_scatter + sharded optimizer + all_gather).
 """
 from __future__ import annotations
 
@@ -18,10 +23,11 @@ import contextlib
 
 _STATE = {"scan_unroll": False, "remat": False,
           "ep_alltoall": True, "seq_shard_acts": False,
-          "tp_shardmap_attn": False, "overlap_halo": True}
+          "tp_shardmap_attn": False, "overlap_halo": True,
+          "grad_comm": "overlap"}
 
 
-def get(name: str) -> bool:
+def get(name: str):
     return _STATE[name]
 
 

@@ -52,6 +52,13 @@ def _allreduce(hw: Hardware, nbytes: float, n: int) -> float:
     return hw.latency * math.log2(n) + 2 * (n - 1) / n * nbytes / hw.ar_bw
 
 
+def _reduce_scatter(hw: Hardware, nbytes: float, n: int) -> float:
+    """One half of a ring allreduce (RS and AG each move (n-1)/n bytes)."""
+    if n <= 1:
+        return 0.0
+    return hw.latency * math.log2(n) + (n - 1) / n * nbytes / hw.ar_bw
+
+
 @dataclasses.dataclass
 class ConvLayer:
     cin: int
@@ -140,8 +147,18 @@ def iteration_time(
     ways: int,            # spatial partitioning (depth)
     global_batch: int,
     overlap: bool = True,  # False: serialized halo (blocking lowering)
+    grad_comm: str = "overlap",  # DESIGN.md §4 gradient-reduction lowering
 ) -> Dict[str, float]:
-    """Predicted seconds per training iteration (paper Eq. Cost)."""
+    """Predicted seconds per training iteration (paper Eq. Cost).
+
+    ``grad_comm`` mirrors the runtime knob: ``"overlap"`` is the paper's
+    model (the allreduce hides behind backprop — the Cost equation's
+    ``max``); ``"monolithic"`` serializes the whole reduction after the
+    backward pass (the seed's tail-psum lowering: fp + bp + AR);
+    ``"reduce_scatter"`` overlaps the RS half with backprop but pays the
+    param all_gather after the optimizer, and shards Adam's (m, v) by
+    the data-parallel degree (``opt_state_bytes``, ZeRO-1).
+    """
     layers = (cosmoflow_layers(cfg) if cfg.arch == "cosmoflow"
               else unet_layers(cfg))
     groups = max(num_gpus // ways, 1)
@@ -154,10 +171,27 @@ def iteration_time(
         # BD + BF ~ 2x the forward cost, same halo structure
         bp_total += 2 * fp
     n_params = cfg.param_count()
-    ar = _allreduce(hw, n_params * 4, num_gpus)
-    total = fp_total + max(bp_total, ar)
+    grad_bytes = n_params * 4
+    ar = _allreduce(hw, grad_bytes, num_gpus)
+    opt_state_bytes = 2.0 * n_params * 4  # Adam m+v, fp32
+    if grad_comm == "monolithic":
+        gc_time, total = ar, fp_total + bp_total + ar
+    elif grad_comm == "reduce_scatter":
+        # mirror the runtime lowering: grads psum over the spatial group
+        # (hook-overlapped) + RS over the data-parallel degree
+        # (overlapped), then the param all_gather after the optimizer
+        # (serialized tail). State shards by the data degree (ZeRO-1).
+        spatial_ar = _allreduce(hw, grad_bytes, ways)
+        half = _reduce_scatter(hw, grad_bytes, groups)
+        gc_time = spatial_ar + 2 * half
+        total = fp_total + max(bp_total, spatial_ar + half) + half
+        opt_state_bytes /= groups  # sharded over the data-parallel degree
+    else:  # "overlap"
+        gc_time, total = ar, fp_total + max(bp_total, ar)
     return {
-        "fp": fp_total, "bp": bp_total, "allreduce": ar, "total": total,
+        "fp": fp_total, "bp": bp_total, "allreduce": ar,
+        "grad_comm": gc_time, "opt_state_bytes": opt_state_bytes,
+        "total": total,
         "samples_per_s": global_batch / total,
         "per_gpu_batch": per_gpu_batch,
     }

@@ -38,10 +38,13 @@ def run(arch="cosmoflow-512", gb=64):
         mesh = compat.make_mesh(
             shape, axes)
         opt = Adam(lr=constant(1e-4))
+        # "overlap" pinned: _opt_specs mirrors the param tree, which only
+        # matches the monolithic/overlap state layout
         step = make_convnet_train_step(
             cfg, mesh, opt, spatial_axes=tuple(spatial) if len(spatial) == 3
             else tuple(spatial) + (None,) * (3 - len(spatial)),
-            data_axes=("data",), global_batch=gb, jit=False)
+            data_axes=("data",), global_batch=gb, jit=False,
+            grad_comm="overlap")
         params = jax.eval_shape(
             lambda: cf.init_params(jax.random.PRNGKey(0), cfg, jnp.bfloat16))
         params = jax.tree.map(

@@ -93,10 +93,14 @@ def build_lowerable(arch: str, shape_name: str, mesh, multi_pod: bool,
     if isinstance(cfg, ConvNetConfig):
         from repro.train.train_step import make_convnet_train_step
         gb = specs.conv_global_batch(cfg.arch, policy, mesh)
+        # pinned to "overlap": the abstract opt state below mirrors the
+        # param tree, which only matches the monolithic/overlap modes
+        # (reduce_scatter carries flat bucket-sharded state instead)
         step = make_convnet_train_step(
             cfg, mesh, opt,
             spatial_axes=("model", None, None),
-            data_axes=policy.data_axes, global_batch=gb, jit=False)
+            data_axes=policy.data_axes, global_batch=gb, jit=False,
+            grad_comm="overlap")
         params = _abstract_params(cfg, dtype)
         params = jax.tree.map(
             lambda p: jax.ShapeDtypeStruct(

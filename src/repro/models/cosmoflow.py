@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ConvNetConfig
-from repro.core import dist_norm
+from repro.core import dist_norm, grad_comm
 from repro.core.spatial_conv import (
     SpatialPartitioning,
     conv3d,
@@ -88,6 +88,7 @@ def forward(
     sample_ids: Optional[jax.Array] = None,  # global ids of local samples
     use_pallas: bool = False,
     overlap: Optional[bool] = None,  # None -> flags.get("overlap_halo")
+    grad_axes: Sequence[str] = (),  # per-layer grad-reduction hooks (§4)
 ) -> jax.Array:
     """x: local shard (N_loc, D_loc, H_loc, W_loc, Cin) -> (N_loc, out_dim).
 
@@ -100,6 +101,12 @@ def forward(
     """
     n = num_blocks(cfg)
     npool = num_pools(cfg)
+    # DESIGN.md §4: big kernels get their reduction hook at the layer
+    # boundary (marker.mark); BN scales/biases and FC biases are coalesced
+    # into flat buckets once, here at entry (marker.begin). No-op when
+    # grad_axes is empty (eval, monolithic oracle).
+    marker = grad_comm.GradMarker(grad_axes)
+    params = marker.begin(params)
     h = x
     w = cfg.input_width  # global width, tracked statically
     axes = list(part.axes)
@@ -113,13 +120,18 @@ def forward(
                 axes[d] = None
         part = SpatialPartitioning(tuple(axes))
         stride = 2 if i == 3 else 1  # block 4 (0-indexed 3) is the strided conv
-        h = conv3d(h, params[f"conv{i}_w"], part, stride=stride,
+        h = conv3d(h, marker.mark(params[f"conv{i}_w"]), part, stride=stride,
                    use_pallas=use_pallas, overlap=overlap)
         if cfg.batchnorm:
+            # leaky-ReLU folded into the normalize pass (fused Pallas
+            # kernel under use_pallas) — one HBM round-trip, not two.
             h = dist_norm.distributed_batchnorm(
-                h, params[f"bn{i}_scale"], params[f"bn{i}_bias"], bn_axes,
+                h, marker.mark(params[f"bn{i}_scale"]),
+                marker.mark(params[f"bn{i}_bias"]), bn_axes,
+                use_pallas=use_pallas, activation_slope=0.01,
             )
-        h = jax.nn.leaky_relu(h, negative_slope=0.01)
+        else:
+            h = jax.nn.leaky_relu(h, negative_slope=0.01)
         if i == 3:
             w //= 2
         if i < npool:
@@ -130,7 +142,8 @@ def forward(
     h = h.reshape(h.shape[0], -1)
     n_fc = len(cfg.fc_dims) + 1
     for j in range(n_fc):
-        h = h @ params[f"fc{j}_w"] + params[f"fc{j}_b"]
+        h = (h @ marker.mark(params[f"fc{j}_w"])
+             + marker.mark(params[f"fc{j}_b"]))
         if j < n_fc - 1:
             h = jax.nn.leaky_relu(h, negative_slope=0.01)
             if train and dropout_rng is not None:
@@ -149,6 +162,7 @@ def forward(
                        else jnp.arange(h.shape[0]))
                 mask = jax.vmap(mask_row)(ids)
                 h = jnp.where(mask, h / keep, 0.0)
+    marker.assert_all_marked()
     return h
 
 
@@ -168,6 +182,7 @@ def mse_loss(
     sample_ids: Optional[jax.Array] = None,
     use_pallas: bool = False,
     overlap: Optional[bool] = None,
+    grad_axes: Sequence[str] = (),
 ) -> jax.Array:
     """LOCAL loss contribution, normalized so that ``psum`` over ALL mesh
     axes yields the global mean loss *and* correct grads.
@@ -182,7 +197,7 @@ def mse_loss(
         params, x, cfg, part, bn_axes=bn_axes, train=train,
         spatial_shards=spatial_shards,
         dropout_rng=dropout_rng, sample_ids=sample_ids,
-        use_pallas=use_pallas, overlap=overlap,
+        use_pallas=use_pallas, overlap=overlap, grad_axes=grad_axes,
     )
     n_global = global_batch or x.shape[0]
     per_sample = jnp.mean(jnp.square(pred - y), axis=-1)

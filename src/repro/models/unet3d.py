@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ConvNetConfig
-from repro.core import dist_norm
+from repro.core import dist_norm, grad_comm
 from repro.core.spatial_conv import (
     SpatialPartitioning,
     conv3d,
@@ -71,10 +71,15 @@ def init_params(key: jax.Array, cfg: ConvNetConfig, dtype=jnp.float32) -> Params
     return params
 
 
-def _conv_bn_relu(h, w, s, b, part, bn_axes, use_pallas, overlap=None):
+def _conv_bn_relu(h, w, s, b, part, bn_axes, use_pallas, overlap=None,
+                  mark=None):
+    if mark:
+        w, s, b = mark(w), mark(s), mark(b)
     h = conv3d(h, w, part, stride=1, use_pallas=use_pallas, overlap=overlap)
-    h = dist_norm.distributed_batchnorm(h, s, b, bn_axes)
-    return jax.nn.relu(h)
+    # ReLU (slope 0) folded into the normalize pass; fused Pallas kernel
+    # under use_pallas (one HBM round-trip instead of two).
+    return dist_norm.distributed_batchnorm(
+        h, s, b, bn_axes, use_pallas=use_pallas, activation_slope=0.0)
 
 
 def forward(
@@ -86,33 +91,39 @@ def forward(
     bn_axes: Sequence[str] = (),
     use_pallas: bool = False,
     overlap: Optional[bool] = None,  # None -> flags.get("overlap_halo")
+    grad_axes: Sequence[str] = (),  # per-layer grad-reduction hooks (§4)
 ) -> jax.Array:
     """x: (N_loc, D_loc, H_loc, W_loc, Cin) -> per-voxel logits (..., out_dim)."""
+    marker = grad_comm.GradMarker(grad_axes)
+    params = marker.begin(params)
+    mark = marker.mark
     h = x
     skips = []
     for lvl in range(cfg.depth):
         h = _conv_bn_relu(h, params[f"enc{lvl}_w0"], params[f"enc{lvl}_s0"],
                           params[f"enc{lvl}_b0"], part, bn_axes, use_pallas,
-                          overlap)
+                          overlap, mark)
         h = _conv_bn_relu(h, params[f"enc{lvl}_w1"], params[f"enc{lvl}_s1"],
                           params[f"enc{lvl}_b1"], part, bn_axes, use_pallas,
-                          overlap)
+                          overlap, mark)
         skips.append(h)
         h = maxpool3d(h, part, window=2, stride=2, overlap=overlap)
     h = _conv_bn_relu(h, params["mid_w0"], params["mid_s0"], params["mid_b0"],
-                      part, bn_axes, use_pallas, overlap)
+                      part, bn_axes, use_pallas, overlap, mark)
     h = _conv_bn_relu(h, params["mid_w1"], params["mid_s1"], params["mid_b1"],
-                      part, bn_axes, use_pallas, overlap)
+                      part, bn_axes, use_pallas, overlap, mark)
     for lvl in reversed(range(cfg.depth)):
-        h = deconv3d(h, params[f"dec{lvl}_up"], part, stride=2)
+        h = deconv3d(h, mark(params[f"dec{lvl}_up"]), part, stride=2)
         h = jnp.concatenate([skips[lvl], h], axis=-1)
         h = _conv_bn_relu(h, params[f"dec{lvl}_w0"], params[f"dec{lvl}_s0"],
                           params[f"dec{lvl}_b0"], part, bn_axes, use_pallas,
-                          overlap)
+                          overlap, mark)
         h = _conv_bn_relu(h, params[f"dec{lvl}_w1"], params[f"dec{lvl}_s1"],
                           params[f"dec{lvl}_b1"], part, bn_axes, use_pallas,
-                          overlap)
-    return conv3d(h, params["head_w"], part, stride=1, overlap=overlap)
+                          overlap, mark)
+    out = conv3d(h, mark(params["head_w"]), part, stride=1, overlap=overlap)
+    marker.assert_all_marked()
+    return out
 
 
 def segmentation_loss(
@@ -126,13 +137,15 @@ def segmentation_loss(
     global_voxels: int = 0,
     use_pallas: bool = False,
     overlap: Optional[bool] = None,
+    grad_axes: Sequence[str] = (),
 ) -> jax.Array:
     """LOCAL per-voxel CE contribution (sum over local voxels / global voxel
     count): ``psum`` over all mesh axes yields the global mean. Labels are
     spatially sharded like the input (the paper's point: ground truth is as
     large as the input and must be spatially distributed too)."""
     logits = forward(params, x, cfg, part, bn_axes=bn_axes,
-                     use_pallas=use_pallas, overlap=overlap)
+                     use_pallas=use_pallas, overlap=overlap,
+                     grad_axes=grad_axes)
     logp = jax.nn.log_softmax(logits, axis=-1)
     nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
     denom = global_voxels or nll.size

@@ -30,11 +30,15 @@ class Adam:
         return AdamState(jnp.zeros((), jnp.int32), zeros,
                          jax.tree.map(jnp.copy, zeros))
 
-    def update(self, grads: Any, state: AdamState,
-               params: Any) -> Tuple[Any, AdamState]:
+    def update(self, grads: Any, state: AdamState, params: Any,
+               *, norm_axes: Tuple[str, ...] = ()) -> Tuple[Any, AdamState]:
+        """``norm_axes``: mesh axes the grad tree is sharded over (the
+        ZeRO-1 reduce-scatter path, DESIGN.md §4) — the clip norm is
+        psum-completed across them so sharded and replicated updates
+        clip identically."""
         step = state.step + 1
         if self.grad_clip > 0:
-            gnorm = global_norm(grads)
+            gnorm = global_norm(grads, psum_axes=norm_axes)
             scale = jnp.minimum(1.0, self.grad_clip / (gnorm + 1e-12))
             grads = jax.tree.map(lambda g: g * scale, grads)
         b1, b2 = self.b1, self.b2
@@ -69,7 +73,8 @@ class SGD:
             None,
         )
 
-    def update(self, grads, state, params):
+    def update(self, grads, state, params, *, norm_axes=()):
+        del norm_axes  # SGD has no norm-dependent term
         step = state.step + 1
         m = jax.tree.map(
             lambda m, g: self.momentum * m + g.astype(jnp.float32),
@@ -81,10 +86,12 @@ class SGD:
         return new_params, AdamState(step, m, None)
 
 
-def global_norm(tree: Any) -> jax.Array:
+def global_norm(tree: Any, psum_axes: Tuple[str, ...] = ()) -> jax.Array:
     leaves = jax.tree.leaves(tree)
-    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
-                        for l in leaves))
+    sq = sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    if psum_axes:
+        sq = jax.lax.psum(sq, tuple(psum_axes))
+    return jnp.sqrt(sq)
 
 
 # ------------------------------------------------------------ schedules ---

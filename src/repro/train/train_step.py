@@ -3,15 +3,18 @@
 Two distribution styles, matching DESIGN.md:
 
 * Conv nets (the paper's models): whole-model ``jax.shard_map`` with
-  explicit halo collectives — grads are ``psum``-reduced over every mesh
-  axis (the data-parallel allreduce of paper Fig. 2, green arrows, fused
-  with the spatial-partition reduction).
+  explicit halo collectives. Gradient reduction follows the ``grad_comm``
+  mode (DESIGN.md §4): per-layer bucketed reduction hooks that fire
+  during backward (``overlap``, default — the data-parallel allreduce of
+  paper Fig. 2 fused with the spatial-partition reduction and overlapped
+  with backprop), the seed's tail tree-wide psum (``monolithic``,
+  equivalence oracle), or ZeRO-1 ``psum_scatter`` + sharded optimizer +
+  ``all_gather`` (``reduce_scatter``).
 * Sequence models: GSPMD ``jax.jit`` with sharding constraints from the
   ShardingPolicy; XLA inserts the collectives.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
 import jax
@@ -20,7 +23,8 @@ from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ConvNetConfig
-from repro.core import compat
+from repro.core import compat, flags
+from repro.core import grad_comm as grad_comm_lib
 from repro.core.sharding import ShardingPolicy
 from repro.core.spatial_conv import SpatialPartitioning
 from repro.models import cosmoflow as cosmoflow_lib
@@ -28,23 +32,79 @@ from repro.models import unet3d as unet_lib
 
 
 # ----------------------------------------------------------- conv nets ----
-def make_convnet_train_step(
+def _resolve_grad_comm(grad_comm: Optional[str]) -> str:
+    mode = grad_comm if grad_comm is not None else flags.get("grad_comm")
+    if mode not in grad_comm_lib.MODES:
+        raise ValueError(
+            f"grad_comm={mode!r}; expected one of {grad_comm_lib.MODES}")
+    return mode
+
+
+def _convnet_param_shapes(cfg: ConvNetConfig):
+    init_fn = (cosmoflow_lib.init_params if cfg.arch == "cosmoflow"
+               else unet_lib.init_params)
+    return jax.eval_shape(lambda k: init_fn(k, cfg), jax.random.PRNGKey(0))
+
+
+def convnet_grad_plan(cfg: ConvNetConfig) -> "grad_comm_lib.Plan":
+    """The bucket plan the conv-net step uses for ``cfg`` — derived from
+    the init-param shapes under the CURRENT bucket policy. Opt-state
+    construction and step building must agree on it, so a
+    ``grad_comm.bucket_policy(...)`` override has to wrap both (or pass
+    an explicit ``plan=`` to ``make_convnet_opt_state``)."""
+    return grad_comm_lib.make_plan(_convnet_param_shapes(cfg))
+
+
+def make_convnet_opt_state(
+    cfg: ConvNetConfig,
+    optimizer,
+    params,
+    *,
+    mesh=None,
+    data_axes: Tuple[str, ...] = ("data",),
+    grad_comm: Optional[str] = None,
+    plan=None,
+):
+    """Optimizer state matching ``make_convnet_train_step``'s mode:
+    replicated full-tree state for monolithic/overlap, ZeRO-1 flat bucket
+    state (dim 0 sharded over the data axes by the step's specs) for
+    reduce_scatter (which requires ``mesh``)."""
+    mode = _resolve_grad_comm(grad_comm)
+    if mode != "reduce_scatter":
+        return optimizer.init(params)
+    if mesh is None:
+        raise ValueError("grad_comm='reduce_scatter' opt state is sharded "
+                         "over the data axes: pass mesh=")
+    n_data = 1
+    for a in data_axes:
+        n_data *= mesh.shape[a]
+    return grad_comm_lib.init_sharded_opt_state(
+        optimizer, plan if plan is not None else convnet_grad_plan(cfg),
+        num_shards=n_data)
+
+
+def _build_convnet_step(
     cfg: ConvNetConfig,
     mesh,
     optimizer,
     *,
-    spatial_axes: Tuple[Optional[str], ...] = ("model", None, None),
-    data_axes: Tuple[str, ...] = ("data",),
+    spatial_axes: Tuple[Optional[str], ...],
+    data_axes: Tuple[str, ...],
     global_batch: int,
-    use_pallas: bool = False,
-    overlap: Optional[bool] = None,  # halo mode: None -> flags overlap_halo
-    jit: bool = True,
+    use_pallas: bool,
+    overlap: Optional[bool],
+    grad_comm: Optional[str],
+    stage: str,  # "fwd" | "bwd" | "grad_comm" | "step"
 ):
-    """Returns step(params, opt_state, x, y, rng) -> (params, opt, loss).
+    """Common builder for the train step and its phase probes.
 
-    x: (N, D, H, W, C) sharded (data..., spatial...); y: (N, out) or voxel
-    labels (N, D, H, W) for unet.
+    Stages nest: ``fwd`` returns the loss only; ``bwd`` adds the backward
+    pass with NO gradient reduction; ``grad_comm`` adds the mode's
+    reduction (returning the reduced grad tree); ``step`` adds the
+    optimizer update. Successive timing differences attribute the e2e
+    cost to fwd / bwd / grad-comm / optimizer (benchmarks/run.py).
     """
+    mode = _resolve_grad_comm(grad_comm)
     part = SpatialPartitioning(tuple(spatial_axes))
     spatial_names = tuple(a for a in spatial_axes if a)
     all_axes = tuple(data_axes) + spatial_names
@@ -52,6 +112,24 @@ def make_convnet_train_step(
     for a in spatial_names:
         n_spatial *= mesh.shape[a]
     shards3 = tuple(mesh.shape[a] if a else 1 for a in spatial_axes)
+    n_data = 1
+    for a in data_axes:
+        n_data *= mesh.shape[a]
+
+    # DESIGN.md §4: where each mode reduces. "overlap" hooks the full
+    # fused (data+spatial) psum into backward; "reduce_scatter" hooks the
+    # spatial reduction only (the data-axis reduction becomes the bucket
+    # psum_scatter); "monolithic" reduces nothing in backward.
+    if stage in ("fwd", "bwd"):
+        model_grad_axes: Tuple[str, ...] = ()
+    elif mode == "overlap":
+        model_grad_axes = all_axes
+    elif mode == "reduce_scatter":
+        model_grad_axes = spatial_names
+    else:
+        model_grad_axes = ()
+
+    plan = convnet_grad_plan(cfg) if mode == "reduce_scatter" else None
 
     def local_step(params, opt_state, x, y, seed):
         # dropout rng is NOT folded per-device: masks are derived per global
@@ -70,7 +148,7 @@ def make_convnet_train_step(
                     global_batch=global_batch, spatial_size=n_spatial,
                     spatial_shards=shards3, sample_ids=sample_ids,
                     train=True, dropout_rng=rng, use_pallas=use_pallas,
-                    overlap=overlap)
+                    overlap=overlap, grad_axes=model_grad_axes)
         else:
             gv = global_batch * cfg.input_width ** 3
 
@@ -78,26 +156,122 @@ def make_convnet_train_step(
                 return unet_lib.segmentation_loss(
                     p, x, y, cfg, part, bn_axes=all_axes,
                     global_voxels=gv, use_pallas=use_pallas,
-                    overlap=overlap)
+                    overlap=overlap, grad_axes=model_grad_axes)
+
+        if stage == "fwd":
+            return lax.psum(loss_fn(params), all_axes)
 
         loss, grads = jax.value_and_grad(loss_fn)(params)
-        grads = jax.tree.map(lambda g: lax.psum(g, all_axes), grads)
         loss = lax.psum(loss, all_axes)
-        new_params, new_opt = optimizer.update(grads, opt_state, params)
+        if stage == "bwd":
+            # timing-only probe: collapse the (per-device partial) grads
+            # into one psummed scalar — forces the full backward without
+            # presenting unreduced trees as replicated output, and
+            # without the per-leaf reduction this stage exists to exclude
+            gsum = sum(jnp.sum(g) for g in jax.tree.leaves(grads))
+            return loss, lax.psum(gsum, all_axes)
+
+        if mode == "monolithic":
+            grads = jax.tree.map(lambda g: lax.psum(g, all_axes), grads)
+        if stage == "grad_comm":
+            if mode == "reduce_scatter":
+                # pure-comm probe: scatter + gather, no optimizer math
+                shards = grad_comm_lib.reduce_scatter_grads(
+                    grads, plan, data_axes)
+                grads = grad_comm_lib.all_gather_params(
+                    shards, plan, data_axes, grads)
+            return loss, grads
+
+        if mode == "reduce_scatter":
+            new_params, new_opt = grad_comm_lib.sharded_update(
+                optimizer, grads, opt_state, params, plan, data_axes)
+        else:
+            new_params, new_opt = optimizer.update(grads, opt_state, params)
         return new_params, new_opt, loss
 
     dspec = data_axes if len(data_axes) > 1 else data_axes[0]
     x_spec = P(dspec, *spatial_axes, None)
     y_spec = (P(dspec, *spatial_axes) if cfg.arch == "unet3d"
               else P(dspec, None))
-    mapped = compat.shard_map(
+    opt_spec: Any = P()
+    if mode == "reduce_scatter":
+        # per-bucket flat vectors, dim 0 sharded over the data axes (the
+        # ZeRO-1 memory win); scalars (step count) replicated.
+        state_shapes = jax.eval_shape(
+            lambda: grad_comm_lib.init_sharded_opt_state(
+                optimizer, plan, num_shards=n_data))
+        shard_spec = P(tuple(data_axes))
+        opt_spec = jax.tree.map(
+            lambda s: P() if s.ndim == 0 else shard_spec, state_shapes)
+    out_specs = {
+        "fwd": P(),
+        "bwd": (P(), P()),
+        "grad_comm": (P(), P()),
+        "step": (P(), opt_spec, P()),
+    }[stage]
+    return compat.shard_map(
         local_step, mesh=mesh,
-        in_specs=(P(), P(), x_spec, y_spec, P()),
-        out_specs=(P(), P(), P()),
+        in_specs=(P(), opt_spec, x_spec, y_spec, P()),
+        out_specs=out_specs,
     )
+
+
+def make_convnet_train_step(
+    cfg: ConvNetConfig,
+    mesh,
+    optimizer,
+    *,
+    spatial_axes: Tuple[Optional[str], ...] = ("model", None, None),
+    data_axes: Tuple[str, ...] = ("data",),
+    global_batch: int,
+    use_pallas: bool = False,
+    overlap: Optional[bool] = None,  # halo mode: None -> flags overlap_halo
+    grad_comm: Optional[str] = None,  # None -> flags grad_comm
+    jit: bool = True,
+):
+    """Returns step(params, opt_state, x, y, rng) -> (params, opt, loss).
+
+    x: (N, D, H, W, C) sharded (data..., spatial...); y: (N, out) or voxel
+    labels (N, D, H, W) for unet. ``grad_comm="reduce_scatter"`` steps
+    expect ``opt_state`` from ``make_convnet_opt_state`` (flat ZeRO-1
+    bucket state); the other modes take ``optimizer.init(params)``.
+    """
+    mapped = _build_convnet_step(
+        cfg, mesh, optimizer, spatial_axes=spatial_axes,
+        data_axes=data_axes, global_batch=global_batch,
+        use_pallas=use_pallas, overlap=overlap, grad_comm=grad_comm,
+        stage="step")
     if not jit:
         return mapped
     return jax.jit(mapped, donate_argnums=(0, 1))
+
+
+def make_convnet_phase_probes(
+    cfg: ConvNetConfig,
+    mesh,
+    optimizer,
+    *,
+    spatial_axes: Tuple[Optional[str], ...] = ("model", None, None),
+    data_axes: Tuple[str, ...] = ("data",),
+    global_batch: int,
+    use_pallas: bool = False,
+    overlap: Optional[bool] = None,
+    grad_comm: Optional[str] = None,
+) -> Dict[str, Callable]:
+    """Jitted probes isolating the train-step phases for attribution:
+    ``fwd`` (loss only), ``bwd`` (+backward, no reduction), ``grad_comm``
+    (+the mode's reduction), ``step`` (full). All share the step's
+    signature (non-``step`` probes ignore ``opt_state``); phase times are
+    successive differences. No donation — the bench re-times one input.
+    """
+    return {
+        stage: jax.jit(_build_convnet_step(
+            cfg, mesh, optimizer, spatial_axes=spatial_axes,
+            data_axes=data_axes, global_batch=global_batch,
+            use_pallas=use_pallas, overlap=overlap, grad_comm=grad_comm,
+            stage=stage))
+        for stage in ("fwd", "bwd", "grad_comm", "step")
+    }
 
 
 def make_convnet_eval_step(

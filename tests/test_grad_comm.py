@@ -1,0 +1,365 @@
+"""Gradient-communication subsystem tests (DESIGN.md §4).
+
+Four contracts:
+
+1. Equivalence — {monolithic, overlap, reduce_scatter} x {1,2,4}-way data
+   x 2-way spatial produce the same params after N train steps on both
+   paper models (the monolithic tail psum is the oracle).
+2. Structure — the overlapped lowering emits one reduction collective per
+   BUCKET (not one fused tail psum per leaf), the bucket count matches
+   the bucketing policy, and at least one reduction is emitted before
+   the backward compute finishes (the overlap window the XLA scheduler
+   exploits).
+3. Bucketing policy — big leaves keep their own bucket, small leaves
+   coalesce in flatten order under the byte target, every leaf is
+   covered exactly once.
+4. Memory/model — the ZeRO-1 path shards optimizer state by the
+   data-parallel degree (state init + perf model), and the perf model
+   never predicts the overlapped reduction slower than the serialized
+   one.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import flags, grad_comm
+
+
+# ------------------------------------------------------------- contract 1 -
+def test_modes_match_monolithic_after_steps(multidevice):
+    multidevice("""
+import dataclasses
+import itertools
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import compat
+from repro import configs
+from repro.models import cosmoflow, unet3d
+from repro.optim.adam import Adam, constant
+from repro.train.train_step import (make_convnet_train_step,
+                                    make_convnet_opt_state)
+
+for arch in ('cosmoflow-512', 'unet3d-256'):
+    cfg = configs.get_smoke_config(arch)
+    if cfg.arch == 'cosmoflow':
+        cfg = dataclasses.replace(cfg, input_width=16)
+    gb = 4
+    W = cfg.input_width
+    x = jax.random.normal(jax.random.PRNGKey(0), (gb, W, W, W,
+                                                  cfg.in_channels))
+    if cfg.arch == 'cosmoflow':
+        y = jax.random.normal(jax.random.PRNGKey(1), (gb, cfg.out_dim))
+        params0 = cosmoflow.init_params(jax.random.PRNGKey(2), cfg)
+    else:
+        y = jax.random.randint(jax.random.PRNGKey(1), (gb, W, W, W), 0,
+                               cfg.out_dim)
+        params0 = unet3d.init_params(jax.random.PRNGKey(2), cfg)
+    for d_ways in (1, 2, 4):
+        mesh = compat.make_mesh((d_ways, 2), ('data', 'model'))
+        results = {}
+        for mode in ('monolithic', 'overlap', 'reduce_scatter'):
+            opt = Adam(lr=constant(1e-3))
+            step = make_convnet_train_step(
+                cfg, mesh, opt, spatial_axes=('model', None, None),
+                data_axes=('data',), global_batch=gb, grad_comm=mode)
+            st = make_convnet_opt_state(cfg, opt, params0, mesh=mesh,
+                                        data_axes=('data',), grad_comm=mode)
+            p = jax.tree.map(jnp.copy, params0)
+            for s in range(2):
+                p, st, loss = step(p, st, x, y, jnp.asarray(s, jnp.int32))
+            results[mode] = jax.device_get(p)
+            assert np.isfinite(float(loss)), (arch, d_ways, mode)
+        ref = results['monolithic']
+        for mode in ('overlap', 'reduce_scatter'):
+            for k in ref:
+                np.testing.assert_allclose(
+                    np.asarray(results[mode][k]), np.asarray(ref[k]),
+                    atol=1e-5, rtol=1e-4,
+                    err_msg=f"{arch} data={d_ways} {mode} {k}")
+print("OK")
+""", devices=8, timeout=560)
+
+
+# ------------------------------------------------------------- contract 2 -
+def test_overlap_jaxpr_bucketed_and_early(multidevice):
+    multidevice("""
+import dataclasses
+import jax, jax.numpy as jnp
+from repro.core import compat, grad_comm
+from jax.sharding import PartitionSpec as P
+from repro import configs
+from repro.core.spatial_conv import SpatialPartitioning
+from repro.models import cosmoflow
+
+# no BN: every psum in the program is a gradient reduction (or the loss)
+cfg = dataclasses.replace(configs.get_smoke_config('cosmoflow-512'),
+                          batchnorm=False)
+part = SpatialPartitioning((None, None, None))
+W = cfg.input_width
+mesh = compat.make_mesh((4,), ('data',))
+x = jnp.zeros((4, W, W, W, cfg.in_channels))
+y = jnp.zeros((4, cfg.out_dim))
+params = jax.tree.map(
+    lambda s: jnp.zeros(s.shape, s.dtype),
+    jax.eval_shape(lambda k: cosmoflow.init_params(k, cfg),
+                   jax.random.PRNGKey(0)))
+plan = grad_comm.make_plan(params)
+assert plan.num_buckets >= 2, plan  # fc0_w is big; the rest coalesce
+
+def find_jaxpr_with(jaxpr, prim):
+    if any(e.primitive.name == prim for e in jaxpr.eqns):
+        return jaxpr
+    for e in jaxpr.eqns:
+        for v in e.params.values():
+            vals = v if isinstance(v, (list, tuple)) else [v]
+            for item in vals:
+                if hasattr(item, 'jaxpr'):
+                    item = item.jaxpr
+                if hasattr(item, 'eqns'):
+                    r = find_jaxpr_with(item, prim)
+                    if r is not None:
+                        return r
+    return None
+
+def stats(grad_axes):
+    def local(p, x, y):
+        def loss_fn(p):
+            return cosmoflow.mse_loss(p, x, y, cfg, part, global_batch=4,
+                                      train=False, grad_axes=grad_axes)
+        loss, g = jax.value_and_grad(loss_fn)(p)
+        if not grad_axes:
+            g = jax.tree.map(lambda t: jax.lax.psum(t, ('data',)), g)
+        return jax.lax.psum(loss, ('data',)), g
+    f = compat.shard_map(local, mesh=mesh,
+                         in_specs=(P(), P('data'), P('data')),
+                         out_specs=(P(), P()))
+    body = find_jaxpr_with(jax.make_jaxpr(f)(params, x, y).jaxpr, 'psum')
+    names = [e.primitive.name for e in body.eqns]
+    n_psum = names.count('psum')
+    compute = [i for i, n in enumerate(names)
+               if n in ('conv_general_dilated', 'dot_general')]
+    psums = [i for i, n in enumerate(names) if n == 'psum']
+    # reductions emitted before the backward compute finishes
+    early = sum(1 for p in psums if any(c > p for c in compute))
+    return n_psum, early
+
+n_leaves = plan.n_leaves
+mono_psum, mono_early = stats(())
+ov_psum, ov_early = stats(('data',))
+# monolithic: one tail psum PER LEAF (+ the loss), none before the end of
+# backward. overlap: one psum per BUCKET (+ the loss), >= 2 independent
+# reduction collectives, at least one emitted mid-backward.
+assert mono_psum == n_leaves + 1, (mono_psum, n_leaves)
+assert mono_early == 0, mono_early
+assert ov_psum == plan.num_buckets + 1, (ov_psum, plan.num_buckets)
+assert ov_psum - 1 >= 2
+assert ov_early >= 1, ov_early
+print("OK")
+""", devices=4)
+
+
+# ------------------------------------------------------------- contract 3 -
+def test_bucket_plan_policy():
+    policy = grad_comm.BucketPolicy(small_thresh_elems=100,
+                                    target_bucket_bytes=700)
+    tree = {
+        "a_small": jnp.zeros((10,)),          # 40 B
+        "b_big": jnp.zeros((40, 40)),         # 1600 elems: own bucket
+        "c_small": jnp.zeros((90,)),          # 360 B
+        "d_small": jnp.zeros((99,)),          # 396 B -> closes bucket (>=700)
+        "e_small": jnp.zeros((5,)),           # new bucket
+        "f_int": jnp.zeros((3,), jnp.int32),  # dtype change -> new bucket
+    }
+    plan = grad_comm.make_plan(tree, policy)
+    assert plan.n_leaves == 6
+    covered = sorted(i for b in plan.buckets for i in b.indices)
+    assert covered == list(range(6))  # every leaf exactly once
+    flats = [b for b in plan.buckets if b.flat]
+    bigs = [b for b in plan.buckets if not b.flat]
+    assert len(bigs) == 1 and bigs[0].shapes == ((40, 40),)
+    # a,c,d coalesce (flatten order) then close at the byte target;
+    # e and f split on dtype
+    sizes = sorted(tuple(len(b.indices) for b in flats))
+    assert len(flats) == 3 and sizes == [1, 1, 3], flats
+    # padding: shard grids divide the padded size
+    for b in plan.buckets:
+        assert plan.padded_size(b, 4) % 4 == 0
+        assert plan.padded_size(b, 4) >= b.size
+
+
+def test_marker_noop_without_axes():
+    tree = {"w": jnp.ones((4, 4))}
+    marker = grad_comm.GradMarker(())
+    assert marker.begin(tree) is tree
+    x = jnp.ones((8,))
+    assert marker.mark(x) is x
+    assert grad_comm.mark_gradient(x, ()) is x
+    marker.assert_all_marked()  # vacuous without axes
+
+
+def test_marker_coverage_check():
+    """An un-mark()ed big leaf must fail loudly, not train silently on
+    unreduced per-device gradients — including when a bucket_policy
+    override turns formerly-coalesced leaves big."""
+    policy = grad_comm.BucketPolicy(small_thresh_elems=4)
+    tree = {"big_a": jnp.ones((8, 8)), "big_b": jnp.ones((8, 8)),
+            "tiny": jnp.ones((2,))}
+
+    def run(mark_all):
+        marker = grad_comm.GradMarker(("data",), policy)
+        t = marker.begin(tree)
+        marker.mark(t["big_a"])
+        if mark_all:
+            marker.mark(t["big_b"])
+        marker.assert_all_marked()
+
+    run(mark_all=True)  # host-side bookkeeping: no grad needed
+    with pytest.raises(AssertionError, match="never passed through"):
+        run(mark_all=False)
+
+
+def test_models_mark_every_leaf_under_any_policy(multidevice):
+    """Both models route EVERY param leaf through begin()/mark(), so an
+    aggressive policy override (everything 'big') still reduces every
+    gradient — pinned by 2-way-data parity against the monolithic tail
+    psum."""
+    multidevice("""
+import dataclasses
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.core import compat, grad_comm
+from repro import configs
+from repro.core.spatial_conv import SpatialPartitioning
+from repro.models import cosmoflow, unet3d
+
+part = SpatialPartitioning((None, None, None))
+mesh = compat.make_mesh((2,), ('data',))
+with grad_comm.bucket_policy(small_thresh_elems=1):  # every leaf big
+    for arch in ('cosmoflow-512', 'unet3d-256'):
+        cfg = configs.get_smoke_config(arch)
+        if cfg.arch == 'cosmoflow':
+            cfg = dataclasses.replace(cfg, input_width=16)
+        W = cfg.input_width
+        x = jax.random.normal(jax.random.PRNGKey(0), (2, W, W, W,
+                                                      cfg.in_channels))
+        if cfg.arch == 'cosmoflow':
+            y = jax.random.normal(jax.random.PRNGKey(1), (2, cfg.out_dim))
+            params = cosmoflow.init_params(jax.random.PRNGKey(2), cfg)
+            def loss(p, ga):
+                return cosmoflow.mse_loss(p, x, y, cfg, part,
+                                          bn_axes=('data',), global_batch=2,
+                                          train=False, grad_axes=ga)
+        else:
+            y = jax.random.randint(jax.random.PRNGKey(1), (2, W, W, W), 0,
+                                   cfg.out_dim)
+            params = unet3d.init_params(jax.random.PRNGKey(2), cfg)
+            def loss(p, ga):
+                return unet3d.segmentation_loss(p, x, y, cfg, part,
+                                                bn_axes=('data',),
+                                                global_voxels=2 * W ** 3,
+                                                grad_axes=ga)
+        def local(p):
+            g_hook = jax.grad(lambda p: loss(p, ('data',)))(p)
+            g_tail = jax.tree.map(
+                lambda t: jax.lax.psum(t, ('data',)),
+                jax.grad(lambda p: loss(p, ()))(p))
+            return g_hook, g_tail
+        gh, gt = jax.jit(compat.shard_map(
+            local, mesh=mesh, in_specs=(P(),), out_specs=(P(), P())))(params)
+        for k in gt:
+            np.testing.assert_allclose(np.asarray(gh[k]), np.asarray(gt[k]),
+                                       atol=1e-5, rtol=1e-4,
+                                       err_msg=f"{arch} {k}")
+print("OK")
+""", devices=2)
+
+
+def test_grad_comm_flag_roundtrip():
+    assert flags.get("grad_comm") == "overlap"
+    with flags.flags(grad_comm="reduce_scatter"):
+        assert flags.get("grad_comm") == "reduce_scatter"
+    assert flags.get("grad_comm") == "overlap"
+    from repro.train.train_step import _resolve_grad_comm
+    with pytest.raises(ValueError):
+        _resolve_grad_comm("bogus")
+
+
+# ------------------------------------------------------------- contract 4 -
+def test_sharded_opt_state_is_1_over_n():
+    from repro.optim.adam import Adam, constant
+    params = {"w": jnp.zeros((1000,)), "b": jnp.zeros((7,))}
+    plan = grad_comm.make_plan(
+        params, grad_comm.BucketPolicy(small_thresh_elems=100))
+    opt = Adam(lr=constant(1e-3))
+    full = opt.init(params)
+    full_elems = sum(l.size for l in jax.tree.leaves((full.m, full.v)))
+    for n in (1, 2, 4):
+        st = grad_comm.init_sharded_opt_state(opt, plan, num_shards=n)
+        total = sum(l.size for l in jax.tree.leaves((st.m, st.v)))
+        # global flat state ~= full tree state (plus shard-grid padding);
+        # the per-device share under P(data) specs is total / n
+        assert total >= full_elems
+        assert total - full_elems < 2 * n * plan.num_buckets
+        per_device = total // n
+        assert per_device <= full_elems // n + 2 * plan.num_buckets
+
+
+def test_perf_model_grad_comm_modes():
+    from repro import configs
+    from repro.core.perf_model import V100, TPU_V5E, iteration_time
+
+    for name in ("cosmoflow-512", "unet3d-256"):
+        cfg = configs.get_config(name)
+        for hw in (V100, TPU_V5E):
+            for ways in (8, 32):
+                kw = dict(num_gpus=ways * 8, ways=ways, global_batch=32)
+                mono = iteration_time(cfg, hw, grad_comm="monolithic", **kw)
+                ov = iteration_time(cfg, hw, grad_comm="overlap", **kw)
+                rs = iteration_time(cfg, hw, grad_comm="reduce_scatter",
+                                    **kw)
+                # serialized tail reduction is never faster than overlapped
+                assert ov["total"] <= mono["total"] + 1e-12
+                # ZeRO-1: optimizer state / data-parallel degree
+                data_degree = kw["num_gpus"] // ways
+                assert rs["opt_state_bytes"] == pytest.approx(
+                    mono["opt_state_bytes"] / data_degree)
+                assert mono["opt_state_bytes"] == pytest.approx(
+                    2 * cfg.param_count() * 4)
+
+
+# --------------------------------------------- satellite: fused BN + act --
+def test_fused_bn_act_matches_unfused_with_grads():
+    """kernels/bn_act wired into the model hot path: the fused
+    (use_pallas) normalize+activation matches the unfused lowering for
+    value AND gradients (the Pallas forward carries the ref VJP)."""
+    from repro.core import dist_norm
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 4, 4, 4, 8))
+    scale = jax.random.normal(jax.random.PRNGKey(1), (8,))
+    bias = jax.random.normal(jax.random.PRNGKey(2), (8,))
+
+    for slope in (0.0, 0.01):
+        def loss(args, use_pallas):
+            x, s, b = args
+            y = dist_norm.distributed_batchnorm(
+                x, s, b, (), use_pallas=use_pallas,
+                activation_slope=slope)
+            return jnp.sum(jnp.square(y))
+
+        v_ref, g_ref = jax.value_and_grad(loss)((x, scale, bias), False)
+        v_fused, g_fused = jax.value_and_grad(loss)((x, scale, bias), True)
+        np.testing.assert_allclose(float(v_fused), float(v_ref), rtol=1e-5)
+        for a, b_ in zip(jax.tree.leaves(g_fused), jax.tree.leaves(g_ref)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                       atol=1e-4, rtol=1e-4)
+
+
+def test_bn_act_interpret_resolved_at_trace_time():
+    """The interpret-mode decision must follow the CURRENT backend, not
+    the backend at import time (the seed froze it in a module global)."""
+    from repro.kernels.bn_act import ops
+
+    assert not hasattr(ops, "_INTERPRET")  # the frozen global is gone
+    assert ops._interpret() == (jax.default_backend() != "tpu")
