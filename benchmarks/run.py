@@ -14,11 +14,16 @@
                         reduction: comm-isolated micro + e2e CosmoFlow step
                         with fwd/bwd/comm/opt phase breakdown + perf-model
                         ZeRO-1 memory accounting (DESIGN.md §4)
+  plan                  per-stage parallelism plans (DESIGN.md §5):
+                        all_to_all reshard micro vs the all_gather oracle,
+                        planned vs fixed-degree e2e CosmoFlow step, and
+                        the planner's cost-model choice at paper scale
 
 Output: ``name,us_per_call,derived`` CSV rows (derived = the figure's
 headline quantity). Run: ``PYTHONPATH=src python -m benchmarks.run
 [--quick] [--only NAME] [--json OUT.json]``; ``--json`` additionally dumps
-the rows for the per-PR perf trajectory (BENCH_*.json).
+the rows for the per-PR perf trajectory (BENCH_*.json) stamped with git
+SHA, flag state and jax version so the trajectory is attributable.
 """
 from __future__ import annotations
 
@@ -625,6 +630,145 @@ def bench_grad_comm(quick=False):
          f"ratio=1/{data_degree}(data_degree)")
 
 
+# --------------------------------------------------------------- plan -----
+_PLAN_BENCH_SCRIPT = """
+import dataclasses
+import time
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.core import compat, plan as plan_lib, reshard
+
+def interleaved(calls, rounds):
+    for c in calls.values():
+        c()
+    samples = {{k: [] for k in calls}}
+    for _ in range(rounds):
+        for k, c in calls.items():
+            t0 = time.perf_counter()
+            c()
+            samples[k].append(time.perf_counter() - t0)
+    def trimmed(v):
+        v = sorted(v)
+        k = max(len(v) // 3, 1)
+        return sum(v[:k]) / k * 1e6
+    return {{k: trimmed(v) for k, v in samples.items()}}
+
+# ---- micro: one spatial->batch reshard, all_to_all vs all_gather oracle.
+# The all_to_all moves (n-1)/n of the local bytes; the oracle gathers
+# (n-1)x then slices — n x the traffic for the identical local block.
+# x is GLOBAL (the in_spec shards dim 1 four ways -> local depth W/4).
+mesh = compat.make_mesh((4,), ('model',))
+W = {micro_w}
+x = jax.random.normal(jax.random.PRNGKey(0), (8, W, W, W, 8))
+calls = {{}}
+for name, fn in (('all_to_all', reshard.spatial_to_batch),
+                 ('oracle', reshard.spatial_to_batch_oracle)):
+    f = jax.jit(compat.shard_map(
+        lambda x, _fn=fn: _fn(x, 'model', 1), mesh=mesh,
+        in_specs=(P(None, 'model'),), out_specs=P('model')))
+    calls[name] = (lambda f=f: jax.block_until_ready(f(x)))
+us = interleaved(calls, rounds=3 * {reps})
+print(f"ROW,plan.reshard.oracle_allgather,{{us['oracle']:.1f}},"
+      f"4way;spatial_to_batch;W={{W}}")
+print(f"ROW,plan.reshard.all_to_all,{{us['all_to_all']:.1f}},"
+      f"speedup={{us['oracle']/us['all_to_all']:.3f}}x_vs_allgather_oracle")
+
+# ---- e2e: smoke CosmoFlow train step, fixed-degree legacy plan vs a
+# mid-net spatial->batch transitioning plan, 4-way depth mesh.
+from repro import configs
+from repro.models import cosmoflow
+from repro.optim.adam import Adam, constant
+from repro.train.train_step import make_convnet_train_step
+
+cfg = dataclasses.replace(configs.get_smoke_config('cosmoflow-512'),
+                          input_width=16)
+gb, Wc = 4, cfg.input_width
+xs = jax.random.normal(jax.random.PRNGKey(2), (gb, Wc, Wc, Wc, cfg.in_channels))
+ys = jax.random.normal(jax.random.PRNGKey(3), (gb, cfg.out_dim))
+p0 = cosmoflow.init_params(jax.random.PRNGKey(4), cfg)
+mesh2 = compat.make_mesh((1, 4), ('data', 'model'))
+plans = {{
+    'fixed': None,
+    'planned_b2_batch': plan_lib.convnet_plan(
+        cfg, boundary=2, kind='batch', spatial_degrees=(4, 1, 1)),
+    'planned_uniform_batch_fc': plan_lib.convnet_plan(
+        cfg, boundary=None, kind='batch', spatial_degrees=(4, 1, 1)),
+}}
+cells = {{}}
+seed = jnp.asarray(0, jnp.int32)
+for name, pl in plans.items():
+    opt = Adam(lr=constant(1e-3))
+    step = jax.jit(make_convnet_train_step(cfg, mesh2, opt, global_batch=gb,
+                                           plan=pl, jit=False))
+    st = opt.init(p0)
+    cells[name] = (lambda step=step, st=st: jax.block_until_ready(
+        step(p0, st, xs, ys, seed)[2]))
+t = interleaved(cells, rounds=2 * {reps})
+print(f"ROW,plan.step.cosmoflow.fixed,{{t['fixed']:.1f}},"
+      f"4way_depth;W={{Wc}};legacy_replicated_fc")
+for name in ('planned_b2_batch', 'planned_uniform_batch_fc'):
+    print(f"ROW,plan.step.cosmoflow.{{name}},{{t[name]:.1f}},"
+          f"speedup={{t['fixed']/t[name]:.3f}}x_vs_fixed")
+"""
+
+
+def bench_plan(quick=False):
+    """Per-stage parallelism plans: reshard micro + planned-vs-fixed e2e.
+
+    Subprocess with 4 forced host devices (the main process keeps the
+    real 1-device CPU). On CPU collectives are memcpys, so the all_to_all
+    vs all_gather gap reflects bytes-moved, not fabric latency; the e2e
+    rows compare the legacy fixed-degree lowering against transitioning
+    plans. The planner's cost-model choice at paper scale (V100, 16-way
+    spatial x 16-way data) is emitted analytically from the main process,
+    with the gate invariant: chosen cost <= fixed-degree cost.
+    """
+    import os
+    import subprocess
+    import sys
+
+    script = _PLAN_BENCH_SCRIPT.format(reps=6 if quick else 12,
+                                       micro_w=16 if quick else 24)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=4").strip()
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    try:
+        proc = subprocess.run([sys.executable, "-c", script], env=env,
+                              capture_output=True, text=True, timeout=900)
+    except subprocess.TimeoutExpired:
+        emit("plan.error", 0.0, "subprocess_timeout:900s")
+        return
+    if proc.returncode != 0:
+        emit("plan.error", 0.0,
+             f"subprocess_failed:{proc.stderr.strip()[-200:]}")
+        return
+    for line in proc.stdout.splitlines():
+        if line.startswith("ROW,"):
+            _, name, us, derived = line.split(",", 3)
+            emit(name, float(us), derived)
+
+    # planner choice at paper scale (analytic; the verify.sh plan gate).
+    # baseline: the legacy fixed-degree plan priced directly, NOT drawn
+    # from the planner's candidate set.
+    from repro import configs
+    from repro.core import plan as plan_lib
+    from repro.core.perf_model import V100
+    cfg = configs.get_config("cosmoflow-512")
+    kw = dict(spatial_degree=16, data_degree=16, global_batch=64)
+    cands = plan_lib.candidate_convnet_plans(cfg, V100, **kw)
+    chosen = plan_lib.plan_convnet(cfg, V100, **kw)
+    fixed, fixed_cost = plan_lib.price_fixed_degree(cfg, V100, **kw)
+    emit("plan.model.cosmoflow512.chosen", 0.0,
+         f"{chosen.name};cost_ms={chosen.cost*1e3:.2f};"
+         f"candidates={len(cands)}")
+    emit("plan.model.cosmoflow512.fixed_degree", 0.0,
+         f"{fixed.name};cost_ms={fixed_cost*1e3:.2f};"
+         f"chosen_speedup={fixed_cost/chosen.cost:.3f}x")
+
+
 BENCHES = {
     "fig4_strong_scaling": bench_fig4_strong_scaling,
     "fig7_unet_strong": bench_fig7_unet_strong,
@@ -636,7 +780,29 @@ BENCHES = {
     "kernels": bench_kernels,
     "conv_overlap": bench_conv_overlap,
     "grad_comm": bench_grad_comm,
+    "plan": bench_plan,
 }
+
+
+def _provenance() -> dict:
+    """Attribution stamp for every BENCH_*.json: which commit, flag
+    state, and jax produced the rows."""
+    import os
+    import subprocess
+
+    from repro.core import flags
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            timeout=10).stdout.strip() or None
+    except Exception:
+        sha = None
+    return {
+        "git_sha": sha,
+        "jax_version": jax.__version__,
+        "flags": flags.snapshot(),
+    }
 
 
 def main() -> None:
@@ -665,6 +831,7 @@ def main() -> None:
             "device_count": jax.device_count(),
             "quick": args.quick,
             "only": args.only,
+            **_provenance(),
             "rows": [
                 {"name": n, "us_per_call": us, "derived": d}
                 for n, us, d in ROWS

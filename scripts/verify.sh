@@ -40,4 +40,33 @@ print(f"grad-comm smoke OK: overlap {mono / ov:.2f}x vs monolithic")
 EOF
 rm -f "$GC_JSON"
 
+echo "== plan gate =="
+# DESIGN.md §5: the planner's chosen CosmoFlow plan must price <= the
+# fixed-degree plan in the perf model, at the paper's strong-scaling
+# operating point. Explicit exit, not assert (PYTHONOPTIMIZE-safe).
+python - <<'EOF'
+import sys
+
+from repro import configs
+from repro.core import plan as plan_lib
+from repro.core.perf_model import V100
+
+cfg = configs.get_config("cosmoflow-512")
+kw = dict(spatial_degree=16, data_degree=16, global_batch=64)
+chosen = plan_lib.plan_convnet(cfg, V100, **kw)
+# independently-constructed baseline (NOT drawn from the planner's
+# candidate set): the legacy fixed-degree plan, priced the same way
+fixed, fixed_cost = plan_lib.price_fixed_degree(cfg, V100, **kw)
+if chosen.cost > fixed_cost:
+    sys.exit(f"plan gate: chosen {chosen.name} ({chosen.cost * 1e3:.2f}ms) "
+             f"prices above fixed-degree {fixed.name} "
+             f"({fixed_cost * 1e3:.2f}ms)")
+print(f"plan gate OK: {chosen.name} {chosen.cost * 1e3:.2f}ms <= "
+      f"{fixed.name} {fixed_cost * 1e3:.2f}ms "
+      f"({fixed_cost / chosen.cost:.3f}x)")
+EOF
+
+# planned-vs-fixed e2e parity (the reshard equivalence contract)
+python -m pytest -q tests/test_plan.py -k "parity" -x
+
 echo "verify: OK"

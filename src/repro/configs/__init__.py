@@ -118,8 +118,8 @@ def skip_reason(arch: str, shape: str) -> str:
         return ("conv net (paper model): token shapes N/A; evaluated on its "
                 "own 3-D volumes")
     if shape in ("decode_32k", "long_500k") and not cfg.supports_decode:
-        return "encoder-only: no decode step (DESIGN.md §6)"
+        return "encoder-only: no decode step (DESIGN.md §7)"
     if shape == "long_500k" and not cfg.subquadratic:
         return ("pure full attention: long_500k requires sub-quadratic "
-                "attention (DESIGN.md §6)")
+                "attention (DESIGN.md §7)")
     return ""

@@ -37,6 +37,11 @@ def distributed_batchnorm(
     s = jnp.sum(x, axis=reduce_dims)
     ss = jnp.sum(jnp.square(x), axis=reduce_dims)
     n = jnp.asarray(n_local, dtype=x.dtype)
+    # NOTE: per-tensor, per-axis psums, kept exactly as the equivalence
+    # oracles pin them (fusing the triple into one collective perturbs
+    # fp32 reduction order past the 1e-5 contracts). Reducing over a
+    # batch-extended or replicated axis (DESIGN.md §5) is equally
+    # correct: the statistics cover the same global batch either way.
     for ax in reduce_axes:
         s = lax.psum(s, ax)
         ss = lax.psum(ss, ax)

@@ -31,6 +31,11 @@ def get(name: str):
     return _STATE[name]
 
 
+def snapshot() -> dict:
+    """Copy of the full flag state (bench provenance, debugging)."""
+    return dict(_STATE)
+
+
 def set_flags(**kw) -> None:
     for k, v in kw.items():
         if k not in _STATE:

@@ -59,6 +59,30 @@ def _reduce_scatter(hw: Hardware, nbytes: float, n: int) -> float:
     return hw.latency * math.log2(n) + (n - 1) / n * nbytes / hw.ar_bw
 
 
+def reshard_time(hw: Hardware, nbytes: float, n: int,
+                 kind: str = "all_to_all") -> float:
+    """One stage-boundary reshard of a ``nbytes`` local activation over an
+    ``n``-way spatial group (DESIGN.md §5).
+
+    ``all_to_all`` (spatial->batch repartition) keeps ``1/n`` of the local
+    bytes and sends the rest — the minimum for the permutation.
+    ``all_gather`` (spatial->replicated, the legacy fallback) *receives*
+    ``(n-1)`` x the local bytes. ``reduce_scatter`` is the all_gather's
+    backward transpose. The P2P link bandwidth applies: reshards ride the
+    same fabric as the halos.
+    """
+    if n <= 1:
+        return 0.0
+    lat = hw.latency * math.log2(n)
+    if kind == "all_to_all":
+        return lat + (n - 1) / n * nbytes / hw.link_bw
+    if kind == "all_gather":
+        return lat + (n - 1) * nbytes / hw.link_bw
+    if kind == "reduce_scatter":
+        return lat + (n - 1) / n * nbytes / hw.link_bw
+    raise ValueError(f"reshard kind {kind!r}")
+
+
 @dataclasses.dataclass
 class ConvLayer:
     cin: int
@@ -139,6 +163,89 @@ def _layer_fp_time(hw: Hardware, l: ConvLayer, ways: int,
     return fp, comp_main
 
 
+def _scheduled_fp_times(
+    cfg: ConvNetConfig,
+    hw: Hardware,
+    layers: List[ConvLayer],
+    schedule: Sequence[str],
+    *,
+    num_gpus: int,
+    ways: int,
+    global_batch: int,
+    overlap: bool,
+) -> Tuple[float, float, float]:
+    """(fp_total, bp_total, reshard_total) under a per-layer parallelism
+    ``schedule`` (DESIGN.md §5): each entry is the layer's layout —
+    ``"spatial"`` (the ``ways``-way depth partition), ``"batch"`` (the
+    spatial group moved into the batch grid: per-device batch shrinks by
+    ``ways``, no halo, no redundancy), or ``"replicated"`` (the legacy
+    fallback: full per-group batch computed redundantly, no halo). For
+    cosmoflow the schedule carries one trailing entry for the FC head
+    (compute unpriced — the head is tiny — but its entry positions the
+    CNN->FC reshard).
+
+    Mode changes between consecutive entries are priced as stage-boundary
+    reshards of the incoming activation: ``all_to_all`` when the batch
+    grid is involved (both directions — the backward transpose is the
+    reverse ``all_to_all``), ``all_gather`` forward + ``reduce_scatter``
+    backward for spatial->replicated, and free for replicated->spatial
+    (a local slice whose transpose is zero-padding).
+    """
+    n_entries = len(layers) + (1 if cfg.arch == "cosmoflow" else 0)
+    if len(schedule) != n_entries:
+        raise ValueError(
+            f"schedule has {len(schedule)} entries; {cfg.arch} needs "
+            f"{n_entries}")
+    bad = set(schedule) - {"spatial", "batch", "replicated"}
+    if bad:
+        raise ValueError(f"unknown schedule modes {sorted(bad)}")
+    groups = max(num_gpus // ways, 1)
+    pg_group = global_batch / groups   # per-device batch, spatial/replicated
+    pg_batch = global_batch / num_gpus  # per-device batch, batch layers
+    # activation entering each entry: (width^3, channels); the FC entry
+    # sees the final feature map
+    entries: List[Tuple[Optional[ConvLayer], int, int]] = [
+        (l, l.width, l.cin) for l in layers]
+    if cfg.arch == "cosmoflow":
+        last = layers[-1]
+        w_out = last.width // last.stride // (2 if last.pooled else 1)
+        entries.append((None, w_out, last.cout))
+
+    fp_total = bp_total = reshard_total = 0.0
+    prev = schedule[0]
+    for (l, w_in, c_in), mode in zip(entries, schedule):
+        if mode != prev:
+            # local activation entering the boundary: spatial layout holds
+            # 1/ways of the volume, batch layout 1/ways of the group batch;
+            # only the replicated fallback holds the full group tensor
+            local_elems = w_in ** 3 * c_in * pg_group
+            if prev in ("spatial", "batch"):
+                local_elems /= ways
+            nbytes = local_elems * hw.bytes_per_elt
+            if "batch" in (prev, mode):
+                fwd = bwd = reshard_time(hw, nbytes, ways, "all_to_all")
+            elif mode == "replicated":
+                fwd = reshard_time(hw, nbytes, ways, "all_gather")
+                bwd = reshard_time(hw, nbytes, ways, "reduce_scatter")
+            else:  # replicated -> spatial: local slice / zero-pad
+                fwd = bwd = 0.0
+            fp_total += fwd
+            bp_total += bwd
+            reshard_total += fwd + bwd
+            prev = mode
+        if l is None:
+            continue  # FC head: compute unpriced, reshard above
+        if mode == "spatial":
+            fp, _ = _layer_fp_time(hw, l, ways, pg_group, overlap=overlap)
+        elif mode == "batch":
+            fp, _ = _layer_fp_time(hw, l, 1, pg_batch, overlap=overlap)
+        else:
+            fp, _ = _layer_fp_time(hw, l, 1, pg_group, overlap=overlap)
+        fp_total += fp
+        bp_total += 2 * fp
+    return fp_total, bp_total, reshard_total
+
+
 def iteration_time(
     cfg: ConvNetConfig,
     hw: Hardware,
@@ -148,6 +255,7 @@ def iteration_time(
     global_batch: int,
     overlap: bool = True,  # False: serialized halo (blocking lowering)
     grad_comm: str = "overlap",  # DESIGN.md §4 gradient-reduction lowering
+    schedule: Optional[Sequence[str]] = None,  # DESIGN.md §5 per-layer plan
 ) -> Dict[str, float]:
     """Predicted seconds per training iteration (paper Eq. Cost).
 
@@ -158,18 +266,30 @@ def iteration_time(
     ``"reduce_scatter"`` overlaps the RS half with backprop but pays the
     param all_gather after the optimizer, and shards Adam's (m, v) by
     the data-parallel degree (``opt_state_bytes``, ZeRO-1).
+
+    ``schedule`` prices a per-layer parallelism plan instead of the single
+    network-wide ``ways`` (see ``_scheduled_fp_times`` /
+    ``core.plan.plan_schedule``): spatial layers keep the ``ways``-way
+    partition, ``batch``/``replicated`` layers run unpartitioned, and
+    layout changes add reshard cost terms (returned as ``"reshard"``).
     """
     layers = (cosmoflow_layers(cfg) if cfg.arch == "cosmoflow"
               else unet_layers(cfg))
     groups = max(num_gpus // ways, 1)
     per_gpu_batch = global_batch / groups
-    fp_total, bp_total = 0.0, 0.0
-    for l in layers:
-        fp, comp = _layer_fp_time(hw, l, ways, per_gpu_batch,
-                                  overlap=overlap)
-        fp_total += fp
-        # BD + BF ~ 2x the forward cost, same halo structure
-        bp_total += 2 * fp
+    reshard_total = 0.0
+    if schedule is not None:
+        fp_total, bp_total, reshard_total = _scheduled_fp_times(
+            cfg, hw, layers, schedule, num_gpus=num_gpus, ways=ways,
+            global_batch=global_batch, overlap=overlap)
+    else:
+        fp_total, bp_total = 0.0, 0.0
+        for l in layers:
+            fp, comp = _layer_fp_time(hw, l, ways, per_gpu_batch,
+                                      overlap=overlap)
+            fp_total += fp
+            # BD + BF ~ 2x the forward cost, same halo structure
+            bp_total += 2 * fp
     n_params = cfg.param_count()
     grad_bytes = n_params * 4
     ar = _allreduce(hw, grad_bytes, num_gpus)
@@ -191,6 +311,7 @@ def iteration_time(
     return {
         "fp": fp_total, "bp": bp_total, "allreduce": ar,
         "grad_comm": gc_time, "opt_state_bytes": opt_state_bytes,
+        "reshard": reshard_total,
         "total": total,
         "samples_per_s": global_batch / total,
         "per_gpu_batch": per_gpu_batch,

@@ -1,0 +1,414 @@
+"""Per-stage parallelism plans (DESIGN.md §5).
+
+The paper's hybrid parallelism pays off only while spatial extents are
+large: a 512^3 conv1 amortizes its halo over millions of voxels, but the
+deep 4^3 layers of CosmoFlow (and the U-Net bottleneck) are dominated by
+per-message latency — there the right layout is pure data parallelism.
+The seed hard-coded one network-wide spatial degree plus a redundant
+all-gather fallback; this module replaces that with an explicit
+**ParallelPlan**: an ordered list of ``Stage`` descriptors, each naming
+the mesh axes (and degrees) that shard the batch and the D/H/W dims for a
+contiguous range of layers. Stage boundaries where the layout changes are
+lowered by ``core/reshard.py`` — ``all_to_all`` batch repartitioning
+(no redundant compute) or the legacy replicated gather (the oracle).
+
+A cost-model-driven **planner** (``plan_convnet``) enumerates candidate
+transition points and kinds for CosmoFlow and the 3D U-Net, prices each
+candidate with ``perf_model.iteration_time`` extended with reshard cost
+terms (the per-layer ``schedule``), and returns the argmin plan. Two
+regimes fall out, pinned by ``tests/test_plan.py``: when per-message
+latency dominates (deep tiny layers, slow fabric) the planner moves the
+spatial group into the batch early; when reshard bandwidth dominates it
+returns the uniform plan.
+
+Layer indexing:
+
+* **cosmoflow** — plan layers ``0..n_blocks-1`` are the conv blocks and
+  layer ``n_blocks`` is the FC head (so the CNN->FC transition is an
+  ordinary stage boundary: ``batch`` via ``all_to_all`` when the local
+  batch divides, else the legacy ``replicated`` gather).
+* **unet3d** — plan layers are resolution *levels*: ``0..depth-1`` the
+  encoder/decoder levels (each decoder level reuses its encoder level's
+  stage, so skip concats stay local) and ``depth`` the bottleneck.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import List, Optional, Sequence, Tuple
+
+from repro.configs.base import ConvNetConfig
+from repro.core import perf_model
+from repro.core.spatial_conv import SpatialPartitioning
+
+AxesT = Tuple[Optional[str], Optional[str], Optional[str]]
+
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    """Layout of one contiguous layer range: which mesh axes shard the
+    batch dim and the D/H/W dims. Axes in neither list hold replicated
+    (redundant) copies for these layers."""
+
+    start: int
+    stop: int  # one past the last layer this stage covers
+    spatial_axes: AxesT = (None, None, None)
+    batch_axes: Tuple[str, ...] = ("data",)
+
+    @property
+    def part(self) -> SpatialPartitioning:
+        return SpatialPartitioning(tuple(self.spatial_axes))
+
+    @property
+    def spatial_names(self) -> Tuple[str, ...]:
+        return self.part.names
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelPlan:
+    """Ordered stages covering layers ``[0, n_layers)`` plus the mesh-axis
+    degrees they reference. ``cost`` is the planner's predicted iteration
+    time (None for hand-built plans)."""
+
+    stages: Tuple[Stage, ...]
+    mesh_axes: Tuple[Tuple[str, int], ...]  # (axis name, degree)
+    n_layers: int
+    name: str = ""
+    cost: Optional[float] = None
+
+    def __post_init__(self):
+        pos = 0
+        for st in self.stages:
+            if st.start != pos or st.stop <= st.start:
+                raise ValueError(
+                    f"plan {self.name!r}: stages must tile [0, n_layers) "
+                    f"contiguously; got {self.stages}")
+            pos = st.stop
+        if pos != self.n_layers:
+            raise ValueError(
+                f"plan {self.name!r}: stages cover [0, {pos}) but "
+                f"n_layers={self.n_layers}")
+        known = {a for a, _ in self.mesh_axes}
+        used = set(self.axis_names)
+        if not used <= known:
+            raise ValueError(
+                f"plan {self.name!r}: stages reference axes "
+                f"{sorted(used - known)} missing from mesh_axes")
+
+    def stage_for(self, layer: int) -> Stage:
+        for st in self.stages:
+            if st.start <= layer < st.stop:
+                return st
+        raise IndexError(f"layer {layer} outside plan [0, {self.n_layers})")
+
+    def degree(self, axis: str) -> int:
+        for a, n in self.mesh_axes:
+            if a == axis:
+                return n
+        raise KeyError(axis)
+
+    @property
+    def axis_names(self) -> Tuple[str, ...]:
+        """Every mesh axis any stage references (batch first, then
+        spatial, first-use order) — the reduction axes for BN statistics,
+        the loss psum, and the gradient hooks."""
+        out: List[str] = []
+        for st in self.stages:
+            for a in tuple(st.batch_axes) + st.spatial_names:
+                if a not in out:
+                    out.append(a)
+        return tuple(out)
+
+    @property
+    def spatial_axis_names(self) -> Tuple[str, ...]:
+        out: List[str] = []
+        for st in self.stages:
+            for a in st.spatial_names:
+                if a not in out:
+                    out.append(a)
+        return tuple(out)
+
+    @property
+    def final_stage(self) -> Stage:
+        return self.stages[-1]
+
+    @property
+    def batch_extension_axes(self) -> Tuple[str, ...]:
+        """Axes moved from spatial to batch, in transition order — the
+        order target tensors must be sliced to follow the activations
+        (``reshard.shard_batch``)."""
+        base = set(self.stages[0].batch_axes)
+        out: List[str] = []
+        for st in self.stages[1:]:
+            for a in st.batch_axes:
+                if a not in base and a not in out:
+                    out.append(a)
+        return tuple(out)
+
+    @property
+    def loss_redundancy(self) -> int:
+        """How many times each sample's loss is computed at the final
+        stage: the product of degrees of spatial axes that ended up
+        replicated (neither spatial nor batch) there. 1 for plans whose
+        transitions are all batch repartitions."""
+        final = self.final_stage
+        live = set(final.batch_axes) | set(final.spatial_names)
+        r = 1
+        for a in self.spatial_axis_names:
+            if a not in live:
+                r *= self.degree(a)
+        return r
+
+
+# ------------------------------------------------------- plan builders ----
+def _axes_pairs(axes: Sequence[str], degrees: Sequence[int]):
+    return tuple(zip(tuple(axes), tuple(int(d) for d in degrees)))
+
+
+def cosmoflow_n_layers(cfg: ConvNetConfig) -> int:
+    return len(cfg.conv_channels) + 1  # conv blocks + the FC head
+
+
+def unet_n_layers(cfg: ConvNetConfig) -> int:
+    return cfg.depth + 1  # resolution levels + the bottleneck
+
+
+def convnet_plan(
+    cfg: ConvNetConfig,
+    *,
+    boundary: Optional[int] = None,
+    kind: str = "batch",
+    spatial_axes: AxesT = ("model", None, None),
+    spatial_degrees: Tuple[int, ...] = (1, 1, 1),
+    data_axes: Tuple[str, ...] = ("data",),
+    data_degrees: Tuple[int, ...] = (1,),
+    cost: Optional[float] = None,
+) -> ParallelPlan:
+    """Single-transition plan: layers ``[0, boundary)`` run spatially
+    partitioned, layers ``[boundary, n)`` pure data-parallel — ``kind``
+    picks the ``all_to_all`` batch repartition or the legacy replicated
+    gather. ``boundary=None`` (or ``n``) keeps the spatial layout through
+    the last conv layer; for cosmoflow the FC head layer then still
+    transitions by ``kind`` (the uniform/legacy plan is
+    ``boundary=None, kind="replicated"``)."""
+    if kind not in ("batch", "replicated"):
+        raise ValueError(f"kind={kind!r}; expected 'batch' or 'replicated'")
+    n = (cosmoflow_n_layers(cfg) if cfg.arch == "cosmoflow"
+         else unet_n_layers(cfg))
+    b = n if boundary is None else boundary
+    if cfg.arch == "cosmoflow":
+        b = min(b, n - 1)  # the FC head can never be spatial
+    if not 1 <= b <= n:
+        raise ValueError(f"boundary={boundary} outside [1, {n}]")
+    moved = tuple(a for a in spatial_axes if a) if kind == "batch" else ()
+    stages = [Stage(0, b, tuple(spatial_axes), tuple(data_axes))]
+    if b < n:
+        stages.append(Stage(b, n, (None, None, None),
+                            tuple(data_axes) + moved))
+    mesh_axes = _axes_pairs(data_axes, data_degrees) + tuple(
+        (a, d) for a, d in zip(spatial_axes, spatial_degrees) if a)
+    if len(stages) == 1:
+        name = f"{cfg.arch}.uniform"  # single stage: kind is meaningless
+    else:
+        label = ("uniform" if cfg.arch == "cosmoflow" and b == n - 1
+                 else f"b{b}")
+        name = f"{cfg.arch}.{label}.{kind}"
+    return ParallelPlan(tuple(stages), mesh_axes, n, name=name, cost=cost)
+
+
+def uniform_plan(
+    cfg: ConvNetConfig,
+    *,
+    spatial_axes: AxesT = ("model", None, None),
+    spatial_degrees: Tuple[int, ...] = (1, 1, 1),
+    data_axes: Tuple[str, ...] = ("data",),
+    data_degrees: Tuple[int, ...] = (1,),
+) -> ParallelPlan:
+    """The fixed-degree plan: one spatial stage end to end (cosmoflow:
+    plus the legacy replicated FC head) — the planner's baseline and the
+    equivalence oracle for every transitioning plan."""
+    return convnet_plan(cfg, boundary=None, kind="replicated",
+                        spatial_axes=spatial_axes,
+                        spatial_degrees=spatial_degrees,
+                        data_axes=data_axes, data_degrees=data_degrees)
+
+
+def legacy_convnet_plan(
+    cfg: ConvNetConfig,
+    part: SpatialPartitioning,
+    spatial_shards: Sequence[int] = (1, 1, 1),
+    *,
+    data_axes: Tuple[str, ...] = ("data",),
+    data_degrees: Tuple[int, ...] = (1,),
+    min_local_width: int = 4,
+) -> ParallelPlan:
+    """The plan the pre-plan code implicitly executed: spatial layout
+    everywhere, with a replicated gather for any dim whose static local
+    width drops below ``min_local_width`` (the over-decomposition
+    fallback) and the replicated FC gather at the head. Derived from the
+    same static width bookkeeping the old forward pass carried, so the
+    planned lowering is block-for-block identical."""
+    axes = list(part.axes)
+    shards = tuple(int(s) for s in spatial_shards)
+    mesh_axes = _axes_pairs(data_axes, data_degrees) + tuple(
+        (a, s) for a, s in zip(axes, shards) if a)
+    if cfg.arch != "cosmoflow":
+        n = unet_n_layers(cfg)
+        return ParallelPlan(
+            (Stage(0, n, tuple(axes), tuple(data_axes)),), mesh_axes, n,
+            name="unet3d.legacy")
+    # per-block entry widths come from perf_model.cosmoflow_layers — the
+    # single holder of the pool-count/stride-4 structure — so the plan's
+    # gather points cannot desync from the model it describes
+    layers = perf_model.cosmoflow_layers(cfg)
+    n_blocks = len(layers)
+    stages: List[Stage] = []
+    start = 0
+    cur: Optional[AxesT] = None
+    for i, layer in enumerate(layers):
+        # same static width bookkeeping as the old per-block gather loop
+        for d, ax in enumerate(axes):
+            if ax is not None and layer.width // shards[d] < min_local_width:
+                axes[d] = None
+        if cur is None:
+            cur = tuple(axes)
+        elif tuple(axes) != cur:
+            stages.append(Stage(start, i, cur, tuple(data_axes)))
+            start, cur = i, tuple(axes)
+    stages.append(Stage(start, n_blocks, cur, tuple(data_axes)))
+    stages.append(Stage(n_blocks, n_blocks + 1, (None, None, None),
+                        tuple(data_axes)))
+    return ParallelPlan(tuple(stages), mesh_axes, n_blocks + 1,
+                        name="cosmoflow.legacy")
+
+
+# ------------------------------------------------------------- planner ----
+def plan_schedule(cfg: ConvNetConfig, plan: ParallelPlan) -> List[str]:
+    """Lower a plan to the per-perf-layer mode list ``iteration_time``
+    prices: cosmoflow conv layers + one trailing FC entry; unet encoder /
+    bottleneck / decoder layers mapped to their levels (decoder reuses
+    the encoder level's stage, so ascent transitions are priced too)."""
+
+    def mode(layer: int) -> str:
+        st = plan.stage_for(layer)
+        if st.spatial_names:
+            return "spatial"
+        return "batch" if set(st.batch_axes) > set(
+            plan.stages[0].batch_axes) else "replicated"
+
+    if cfg.arch == "cosmoflow":
+        n_blocks = len(cfg.conv_channels)
+        return [mode(i) for i in range(n_blocks + 1)]
+    sched: List[str] = []
+    for lvl in range(cfg.depth):          # encoder: 2 convs per level
+        sched += [mode(lvl)] * 2
+    sched += [mode(cfg.depth)] * 2        # bottleneck
+    for lvl in reversed(range(cfg.depth)):  # decoder: deconv + 2 convs
+        sched += [mode(lvl + 1)] + [mode(lvl)] * 2
+    return sched
+
+
+def candidate_convnet_plans(
+    cfg: ConvNetConfig,
+    hw: "perf_model.Hardware",
+    *,
+    spatial_axis: str = "model",
+    spatial_degree: int,
+    data_axes: Tuple[str, ...] = ("data",),
+    data_degree: int = 1,
+    global_batch: int,
+    overlap: bool = True,
+    grad_comm: str = "overlap",
+    min_local_width: int = 4,
+) -> List[ParallelPlan]:
+    """Enumerate single-transition candidates (every admissible boundary
+    x {batch, replicated}, uniform included) and price each with the
+    schedule-extended perf model. Batch transitions require the local
+    batch to divide by the spatial degree; spatial stages require local
+    widths >= ``min_local_width`` (the legacy over-decomposition rule,
+    now enforced at plan time instead of patched at trace time)."""
+    num_gpus = spatial_degree * data_degree
+    per_group_batch = global_batch / max(data_degree, 1)
+    batch_ok = (per_group_batch >= spatial_degree
+                and per_group_batch % spatial_degree == 0)
+    n = (cosmoflow_n_layers(cfg) if cfg.arch == "cosmoflow"
+         else unet_n_layers(cfg))
+
+    # deepest boundary every spatial layer's local width still supports:
+    # a spatial stage [0, b) needs width[i] // degree >= min_local_width
+    # for every layer i < b (the legacy over-decomposition rule, enforced
+    # at plan time)
+    if cfg.arch == "cosmoflow":
+        widths = [l.width for l in perf_model.cosmoflow_layers(cfg)]
+    else:
+        widths = [cfg.input_width // 2 ** lvl for lvl in range(n)]
+    b_max = n
+    for i, w in enumerate(widths):
+        if w // spatial_degree < min_local_width:
+            b_max = i
+            break
+    if b_max == 0:
+        raise ValueError(
+            f"{cfg.arch}: {spatial_degree}-way spatial decomposition gives "
+            f"layer-0 local width {widths[0] // spatial_degree} < "
+            f"{min_local_width}; reduce the spatial degree")
+
+    out: List[ParallelPlan] = []
+    seen = set()
+    kinds = ("batch", "replicated") if batch_ok else ("replicated",)
+    for b, kind in itertools.product(range(1, min(b_max, n) + 1), kinds):
+        plan = convnet_plan(
+            cfg, boundary=b, kind=kind,
+            spatial_axes=(spatial_axis, None, None),
+            spatial_degrees=(spatial_degree, 1, 1),
+            data_axes=data_axes,
+            data_degrees=(data_degree,) + (1,) * (len(data_axes) - 1))
+        key = tuple(plan.stages)  # batch/replicated live in the stages
+        if key in seen:
+            continue
+        seen.add(key)
+        r = perf_model.iteration_time(
+            cfg, hw, num_gpus=num_gpus, ways=spatial_degree,
+            global_batch=global_batch, overlap=overlap, grad_comm=grad_comm,
+            schedule=plan_schedule(cfg, plan))
+        out.append(dataclasses.replace(plan, cost=r["total"]))
+    return out
+
+
+def plan_convnet(
+    cfg: ConvNetConfig,
+    hw: "perf_model.Hardware",
+    **kw,
+) -> ParallelPlan:
+    """Cost-model argmin over ``candidate_convnet_plans``. Ties break
+    toward the fewest transitions (uniform wins when equal)."""
+    cands = candidate_convnet_plans(cfg, hw, **kw)
+    if not cands:
+        raise ValueError("no admissible plans (spatial degree too large?)")
+    return min(cands, key=lambda p: (p.cost, len(p.stages)))
+
+
+def price_fixed_degree(
+    cfg: ConvNetConfig,
+    hw: "perf_model.Hardware",
+    *,
+    spatial_axis: str = "model",
+    spatial_degree: int,
+    data_degree: int = 1,
+    global_batch: int,
+    overlap: bool = True,
+    grad_comm: str = "overlap",
+) -> Tuple[ParallelPlan, float]:
+    """(legacy fixed-degree plan, its schedule-priced iteration time) —
+    the planner-independent baseline the verify.sh plan gate, the plan
+    bench, and the planner tests compare the chosen plan against. It is
+    constructed directly (NOT drawn from the planner's candidate set), so
+    a planner that stops minimizing actually fails the comparison."""
+    fixed = legacy_convnet_plan(
+        cfg, SpatialPartitioning((spatial_axis, None, None)),
+        (spatial_degree, 1, 1), data_degrees=(data_degree,))
+    cost = perf_model.iteration_time(
+        cfg, hw, num_gpus=spatial_degree * data_degree,
+        ways=spatial_degree, global_batch=global_batch, overlap=overlap,
+        grad_comm=grad_comm, schedule=plan_schedule(cfg, fixed))["total"]
+    return fixed, cost

@@ -49,6 +49,11 @@ class SpatialPartitioning:
     ``axes[d]`` is the mesh-axis name sharding spatial dim ``d`` (0=D, 1=H,
     2=W) or None if that dim is unpartitioned. The paper's "8-way depth"
     configuration is ``SpatialPartitioning(('model', None, None))``.
+
+    This is the layout of ONE plan stage: a ``core.plan.ParallelPlan``
+    assigns a partitioning per layer range (``Stage.part``) and
+    ``core/reshard.py`` moves activations between them, so a network is
+    no longer restricted to a single network-wide instance of this.
     """
 
     axes: Tuple[Optional[str], Optional[str], Optional[str]] = (None, None, None)
@@ -56,6 +61,10 @@ class SpatialPartitioning:
     @property
     def active(self) -> Sequence[Tuple[int, str]]:
         return [(d, a) for d, a in enumerate(self.axes) if a is not None]
+
+    @property
+    def names(self) -> Tuple[str, ...]:
+        return tuple(a for a in self.axes if a is not None)
 
 
 def _conv_piece(x: jax.Array, w: jax.Array, stride: int,
@@ -256,8 +265,11 @@ def avgpool3d_global(x: jax.Array, part: SpatialPartitioning) -> jax.Array:
 def spatial_allgather(x: jax.Array, part: SpatialPartitioning) -> jax.Array:
     """Gather a spatially-partitioned activation to a full local copy.
 
-    Used at the CNN->FC transition (paper: the FC layers are tiny and run
-    data-parallel; activations there are a few thousand elements)."""
+    The legacy CNN->FC transition (paper: the FC layers are tiny and run
+    data-parallel; activations there are a few thousand elements) and the
+    equivalence oracle for the plan-driven ``all_to_all`` reshards of
+    ``core/reshard.py`` (DESIGN.md §5), which replace it wherever the
+    cost model justifies a layout change."""
     for d, axis in part.active:
         x = halo_lib.all_gather_dim(x, axis, _SPATIAL_DIMS[d])
     return x

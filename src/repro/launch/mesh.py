@@ -4,25 +4,65 @@ Defined as FUNCTIONS (not module constants) so importing this module never
 touches jax device state. The dry-run launcher sets
 ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
 import; tests and benches see the real (1-device) CPU.
+
+Spatial axes: both builders accept ``spatial=((name, size), ...)`` so a
+``ParallelPlan`` (DESIGN.md §5) referencing named spatial axes can be
+instantiated without ad-hoc ``compat.make_mesh`` calls; ``make_plan_mesh``
+builds the mesh straight from a plan's recorded axis degrees.
 """
 from __future__ import annotations
+
+from typing import Sequence, Tuple
 
 import jax
 
 from repro.core import compat
 
-
-def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return compat.make_mesh(
-        shape, axes)
+SpatialAxes = Sequence[Tuple[str, int]]
 
 
-def make_local_mesh(model: int = 1, data: int = 1):
-    """Mesh over however many (possibly forced-host) devices exist."""
-    return compat.make_mesh(
-        (data, model), ("data", "model"))
+def make_production_mesh(*, multi_pod: bool = False,
+                         spatial: SpatialAxes = ()):
+    """The 256-chip pod mesh (x2 pods with ``multi_pod``). By default the
+    model/spatial side is the single 16-way ``model`` axis; ``spatial``
+    replaces it with named spatial axes (e.g. ``(("d", 8), ("h", 2))``),
+    keeping the per-pod chip count at 256 by sizing ``data`` to the
+    remainder."""
+    chips = 256
+    if spatial:
+        n_spatial = 1
+        for _, s in spatial:
+            n_spatial *= s
+        if chips % n_spatial:
+            raise ValueError(
+                f"spatial degrees {spatial} do not divide {chips}")
+        shape = (chips // n_spatial,) + tuple(s for _, s in spatial)
+        axes = ("data",) + tuple(a for a, _ in spatial)
+    else:
+        shape, axes = (16, 16), ("data", "model")
+    if multi_pod:
+        shape, axes = (2,) + shape, ("pod",) + axes
+    return compat.make_mesh(shape, axes)
+
+
+def make_local_mesh(model: int = 1, data: int = 1, *,
+                    spatial: SpatialAxes = ()):
+    """Mesh over however many (possibly forced-host) devices exist.
+
+    ``spatial`` appends named spatial axes after ``data``/``model`` —
+    pass ``model=1`` (the default) when a plan's axes replace the legacy
+    ``model`` spatial axis entirely."""
+    shape = (data, model) + tuple(s for _, s in spatial)
+    axes = ("data", "model") + tuple(a for a, _ in spatial)
+    return compat.make_mesh(shape, axes)
+
+
+def make_plan_mesh(plan, *, extra: SpatialAxes = ()):
+    """Mesh with exactly the axes (and degrees) a ``ParallelPlan``
+    records, in plan order, plus any ``extra`` trailing axes."""
+    pairs = tuple(plan.mesh_axes) + tuple(extra)
+    return compat.make_mesh(tuple(s for _, s in pairs),
+                            tuple(a for a, _ in pairs))
 
 
 # TPU v5e hardware constants for the roofline analysis (per chip).

@@ -14,8 +14,10 @@ from repro.configs import FSDP_ARCHS, get_config, plan_for
 from repro.configs.base import (
     INPUT_SHAPES, ConvNetConfig, HybridConfig, SSMConfig, TransformerConfig,
 )
+from repro.core import plan as plan_lib
 from repro.core.param_specs import infer_param_specs
 from repro.core.sharding import ShardingPolicy
+from repro.core.spatial_conv import SpatialPartitioning
 from repro.models import frontends
 
 # Paper batch sizes for the conv nets' own dry-runs (Figs. 4/7).
@@ -55,6 +57,44 @@ def _data_spec(policy, mesh, batch: int):
             else policy.data_axes[0])
 
 
+def convnet_plan_for_policy(cfg: ConvNetConfig, policy, mesh,
+                            spatial_axis: str = "model"):
+    """The legacy fixed-degree ``ParallelPlan`` a policy-driven conv-net
+    dry-run executes: ``spatial_axis``-way depth partitioning, batch over
+    the policy's data axes (DESIGN.md §5)."""
+    return plan_lib.legacy_convnet_plan(
+        cfg, SpatialPartitioning((spatial_axis, None, None)),
+        (mesh.shape[spatial_axis], 1, 1),
+        data_axes=tuple(policy.data_axes),
+        data_degrees=tuple(mesh.shape[a] for a in policy.data_axes))
+
+
+def conv_batch_specs(cfg: ConvNetConfig, plan, mesh, *, global_batch: int,
+                     act_dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """x/y ShapeDtypeStructs sharded for a plan's FIRST stage (later
+    stages reshard in-graph). The batch dim falls back to replicated when
+    ``global_batch`` does not divide the stage's batch-axis product."""
+    entry = plan.stages[0]
+    n_batch = 1
+    for a in entry.batch_axes:
+        n_batch *= mesh.shape[a]
+    if global_batch % n_batch:
+        dspec = None
+    else:
+        dspec = (tuple(entry.batch_axes) if len(entry.batch_axes) > 1
+                 else entry.batch_axes[0])
+    W = cfg.input_width
+    x = _sds((global_batch, W, W, W, cfg.in_channels), act_dtype, mesh,
+             P(dspec, *entry.spatial_axes, None))
+    if cfg.arch == "unet3d":
+        y = _sds((global_batch, W, W, W), jnp.int32, mesh,
+                 P(dspec, *entry.spatial_axes))
+    else:
+        y = _sds((global_batch, cfg.out_dim), jnp.float32, mesh,
+                 P(dspec, None))
+    return {"x": x, "y": y}
+
+
 def batch_specs(arch: str, cfg, shape_name: str, policy, mesh,
                 act_dtype=jnp.bfloat16) -> Dict[str, Any]:
     """ShapeDtypeStructs for the step-function `batch` argument."""
@@ -64,16 +104,10 @@ def batch_specs(arch: str, cfg, shape_name: str, policy, mesh,
     seq_spec = policy.model_axis if policy.plan in ("cp", "ep") else None
 
     if isinstance(cfg, ConvNetConfig):
-        W = cfg.input_width
         Bc = conv_global_batch(cfg.arch, policy, mesh)
-        x = _sds((Bc, W, W, W, cfg.in_channels), act_dtype, mesh,
-                 P(dspec, "model", None, None, None))
-        if cfg.arch == "unet3d":
-            y = _sds((Bc, W, W, W), jnp.int32, mesh,
-                     P(dspec, "model", None, None))
-        else:
-            y = _sds((Bc, cfg.out_dim), jnp.float32, mesh, P(dspec, None))
-        return {"x": x, "y": y}
+        return conv_batch_specs(
+            cfg, convnet_plan_for_policy(cfg, policy, mesh), mesh,
+            global_batch=Bc, act_dtype=act_dtype)
 
     tok_spec = P(dspec, seq_spec)
     if getattr(cfg, "family", "") == "audio":

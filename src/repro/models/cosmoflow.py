@@ -6,8 +6,16 @@ channels (16,32,64,128,256,256,256), 3^3 SAME convs (stride 1 except block
 after every conv, leaky-ReLU, then FC 2048 -> 256 -> 4 with dropout
 (keep=0.8), no conv biases (paper removed them for performance), MSE loss.
 
-Written in local-shard style: call inside ``jax.shard_map`` with activations
-partitioned per ``SpatialPartitioning`` and batch over the data axes.
+Written in local-shard style: call inside ``jax.shard_map``. The layout of
+every block is dictated by a ``ParallelPlan`` (DESIGN.md §5): each stage
+names the mesh axes sharding the batch and D/H/W dims, and stage
+boundaries are lowered by ``core/reshard.py`` (``all_to_all`` batch
+repartition or the legacy replicated gather). Callers that pass only a
+``SpatialPartitioning`` get the legacy single-degree plan — spatial
+everywhere, over-decomposed dims gathered once their static local width
+drops below 4 voxels, replicated FC head — derived by
+``plan.legacy_convnet_plan`` from the same static width bookkeeping the
+old forward pass carried inline.
 """
 from __future__ import annotations
 
@@ -18,12 +26,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ConvNetConfig
-from repro.core import dist_norm, grad_comm
+from repro.core import dist_norm, grad_comm, reshard
+from repro.core import plan as plan_lib
 from repro.core.spatial_conv import (
     SpatialPartitioning,
     conv3d,
     maxpool3d,
-    spatial_allgather,
 )
 
 Params = Dict[str, jax.Array]
@@ -75,12 +83,26 @@ def init_params(key: jax.Array, cfg: ConvNetConfig, dtype=jnp.float32) -> Params
     return params
 
 
+def _resolve_plan(
+    cfg: ConvNetConfig,
+    plan: Optional[plan_lib.ParallelPlan],
+    part: Optional[SpatialPartitioning],
+    spatial_shards: Sequence[int],
+) -> plan_lib.ParallelPlan:
+    if plan is not None:
+        return plan
+    return plan_lib.legacy_convnet_plan(
+        cfg, part if part is not None else SpatialPartitioning(),
+        spatial_shards)
+
+
 def forward(
     params: Params,
     x: jax.Array,
     cfg: ConvNetConfig,
-    part: SpatialPartitioning,
+    part: Optional[SpatialPartitioning] = None,
     *,
+    plan: Optional[plan_lib.ParallelPlan] = None,
     bn_axes: Sequence[str] = (),
     spatial_shards: Sequence[int] = (1, 1, 1),
     train: bool = False,
@@ -89,16 +111,19 @@ def forward(
     use_pallas: bool = False,
     overlap: Optional[bool] = None,  # None -> flags.get("overlap_halo")
     grad_axes: Sequence[str] = (),  # per-layer grad-reduction hooks (§4)
+    reshard_oracle: bool = False,  # all_gather+slice instead of all_to_all
 ) -> jax.Array:
-    """x: local shard (N_loc, D_loc, H_loc, W_loc, Cin) -> (N_loc, out_dim).
+    """x: local shard (N_loc, D_loc, H_loc, W_loc, Cin) -> (N_loc', out_dim).
 
-    Over-decomposition fallback (paper §V-B observes 16 GPUs/sample already
-    over-decomposes the deep layers): once the *local* width of a
-    partitioned dim would drop below 4 voxels, the dim is all-gathered and
-    the remaining (tiny) layers run replicated across the spatial group —
-    the redundant-compute factor is accounted for in ``mse_loss`` via
-    ``spatial_size``.
+    ``plan`` drives the per-stage layout; when None, ``part`` +
+    ``spatial_shards`` select the legacy fixed-degree plan (with its
+    over-decomposition gathers — paper §V-B observes 16 GPUs/sample
+    already over-decomposes the deep layers). The output batch is the
+    FINAL stage's local batch: plans whose CNN->FC transition repartitions
+    the spatial group into the batch grid return ``N_loc / spatial_size``
+    rows per device, each sample exactly once across the mesh.
     """
+    plan = _resolve_plan(cfg, plan, part, spatial_shards)
     n = num_blocks(cfg)
     npool = num_pools(cfg)
     # DESIGN.md §4: big kernels get their reduction hook at the layer
@@ -108,20 +133,19 @@ def forward(
     marker = grad_comm.GradMarker(grad_axes)
     params = marker.begin(params)
     h = x
-    w = cfg.input_width  # global width, tracked statically
-    axes = list(part.axes)
+    ids = sample_ids
+    if ids is None and train and dropout_rng is not None:
+        ids = jnp.arange(h.shape[0])
+    cur = plan.stage_for(0)
     for i in range(n):
-        # gather any dim whose local width is too small for halo+pool
-        for d, ax in enumerate(axes):
-            if ax is not None and w // spatial_shards[d] < 4:
-                h = spatial_allgather(
-                    h, SpatialPartitioning((None,) * d + (ax,)
-                                           + (None,) * (2 - d)))
-                axes[d] = None
-        part = SpatialPartitioning(tuple(axes))
+        st = plan.stage_for(i)
+        if st != cur:
+            h, ids = reshard.apply(h, cur, st, sample_ids=ids,
+                                   oracle=reshard_oracle)
+            cur = st
         stride = 2 if i == 3 else 1  # block 4 (0-indexed 3) is the strided conv
-        h = conv3d(h, marker.mark(params[f"conv{i}_w"]), part, stride=stride,
-                   use_pallas=use_pallas, overlap=overlap)
+        h = conv3d(h, marker.mark(params[f"conv{i}_w"]), cur.part,
+                   stride=stride, use_pallas=use_pallas, overlap=overlap)
         if cfg.batchnorm:
             # leaky-ReLU folded into the normalize pass (fused Pallas
             # kernel under use_pallas) — one HBM round-trip, not two.
@@ -132,13 +156,15 @@ def forward(
             )
         else:
             h = jax.nn.leaky_relu(h, negative_slope=0.01)
-        if i == 3:
-            w //= 2
         if i < npool:
-            h = maxpool3d(h, part, window=2, stride=2, overlap=overlap)
-            w //= 2
-    # CNN -> FC transition: gather the (tiny) 2^3 x C activation.
-    h = spatial_allgather(h, part)
+            h = maxpool3d(h, cur.part, window=2, stride=2, overlap=overlap)
+    # CNN -> FC stage boundary: the plan picks the batch repartition
+    # (all_to_all, no redundant compute) or the replicated gather (the
+    # legacy fallback — FC then runs redundantly on every spatial shard).
+    fc_stage = plan.stage_for(n)
+    if fc_stage != cur:
+        h, ids = reshard.apply(h, cur, fc_stage, sample_ids=ids,
+                               oracle=reshard_oracle)
     h = h.reshape(h.shape[0], -1)
     n_fc = len(cfg.fc_dims) + 1
     for j in range(n_fc):
@@ -148,8 +174,9 @@ def forward(
             h = jax.nn.leaky_relu(h, negative_slope=0.01)
             if train and dropout_rng is not None:
                 # per-(sample, layer) deterministic masks: identical across
-                # every spatial shard (the FC head is computed redundantly
-                # on each model-axis shard) and invariant to the mesh shape.
+                # every shard that computes a given sample (replicated FC
+                # heads agree; repartitioned FC heads each own distinct
+                # samples) and invariant to the mesh shape and the plan.
                 keep = 0.8
                 layer_rng = jax.random.fold_in(dropout_rng, j)
 
@@ -158,9 +185,9 @@ def forward(
                         jax.random.fold_in(layer_rng, sid), keep,
                         (h.shape[1],))
 
-                ids = (sample_ids if sample_ids is not None
-                       else jnp.arange(h.shape[0]))
-                mask = jax.vmap(mask_row)(ids)
+                row_ids = (ids if ids is not None
+                           else jnp.arange(h.shape[0]))
+                mask = jax.vmap(mask_row)(row_ids)
                 h = jnp.where(mask, h / keep, 0.0)
     marker.assert_all_marked()
     return h
@@ -171,8 +198,9 @@ def mse_loss(
     x: jax.Array,
     y: jax.Array,
     cfg: ConvNetConfig,
-    part: SpatialPartitioning,
+    part: Optional[SpatialPartitioning] = None,
     *,
+    plan: Optional[plan_lib.ParallelPlan] = None,
     bn_axes: Sequence[str] = (),
     global_batch: int = 0,
     spatial_size: int = 1,
@@ -183,22 +211,31 @@ def mse_loss(
     use_pallas: bool = False,
     overlap: Optional[bool] = None,
     grad_axes: Sequence[str] = (),
+    reshard_oracle: bool = False,
 ) -> jax.Array:
     """LOCAL loss contribution, normalized so that ``psum`` over ALL mesh
     axes yields the global mean loss *and* correct grads.
 
-    After ``spatial_allgather`` every model-axis shard computes the FC head
-    (and hence this loss) redundantly; dividing by ``spatial_size`` makes
-    the subsequent grad psum over the model axis exact (the all_gather
-    transpose reduce-scatters the n redundant cotangents). See
+    The normalizer is the plan's ``loss_redundancy``: how many devices
+    compute each sample's FC head. Replicated-gather plans (and the
+    legacy path, where the caller passes ``spatial_size``) divide by the
+    spatial group size — the all_gather transpose reduce-scatters the n
+    redundant cotangents; batch-repartition plans have redundancy 1 and
+    slice ``y`` to the local chunk alongside the activations. See
     train/train_step.py.
     """
+    if plan is not None:
+        redundancy = plan.loss_redundancy
+        y = reshard.shard_batch(y, plan.batch_extension_axes)
+    else:
+        redundancy = spatial_size
     pred = forward(
-        params, x, cfg, part, bn_axes=bn_axes, train=train,
+        params, x, cfg, part, plan=plan, bn_axes=bn_axes, train=train,
         spatial_shards=spatial_shards,
         dropout_rng=dropout_rng, sample_ids=sample_ids,
         use_pallas=use_pallas, overlap=overlap, grad_axes=grad_axes,
+        reshard_oracle=reshard_oracle,
     )
     n_global = global_batch or x.shape[0]
     per_sample = jnp.mean(jnp.square(pred - y), axis=-1)
-    return jnp.sum(per_sample) / (n_global * spatial_size)
+    return jnp.sum(per_sample) / (n_global * redundancy)

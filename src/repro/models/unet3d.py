@@ -7,6 +7,14 @@ with the skip connection (same partitioning at the same resolution, so the
 residual redistribution of paper §III-A is a local concat here), two convs;
 final 1x1x1 conv to per-voxel class logits; softmax cross-entropy with
 spatially-sharded labels.
+
+Per-stage layout (DESIGN.md §5): a ``ParallelPlan`` over resolution
+*levels* — ``0..depth-1`` encoder/decoder, ``depth`` the bottleneck. Each
+decoder level reuses its encoder level's stage, so skip concats stay
+local; descent boundaries reshard via ``core/reshard.py`` and the ascent
+applies the inverse transitions (``batch_to_spatial`` / local slice)
+before the concat. Callers passing only a ``SpatialPartitioning`` get the
+uniform single-stage plan (the fixed-degree oracle).
 """
 from __future__ import annotations
 
@@ -17,7 +25,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ConvNetConfig
-from repro.core import dist_norm, grad_comm
+from repro.core import dist_norm, grad_comm, reshard
+from repro.core import plan as plan_lib
 from repro.core.spatial_conv import (
     SpatialPartitioning,
     conv3d,
@@ -86,42 +95,68 @@ def forward(
     params: Params,
     x: jax.Array,
     cfg: ConvNetConfig,
-    part: SpatialPartitioning,
+    part: Optional[SpatialPartitioning] = None,
     *,
+    plan: Optional[plan_lib.ParallelPlan] = None,
     bn_axes: Sequence[str] = (),
     use_pallas: bool = False,
     overlap: Optional[bool] = None,  # None -> flags.get("overlap_halo")
     grad_axes: Sequence[str] = (),  # per-layer grad-reduction hooks (§4)
+    reshard_oracle: bool = False,  # all_gather+slice instead of all_to_all
 ) -> jax.Array:
-    """x: (N_loc, D_loc, H_loc, W_loc, Cin) -> per-voxel logits (..., out_dim)."""
+    """x: (N_loc, D_loc, H_loc, W_loc, Cin) -> per-voxel logits (..., out_dim).
+
+    The output carries the plan's level-0 layout — identical to the input
+    layout, whatever the deeper levels transitioned to (every descent
+    reshard is undone on the ascent), so spatially-sharded labels line up
+    unchanged."""
+    if plan is None:
+        plan = plan_lib.legacy_convnet_plan(
+            cfg, part if part is not None else SpatialPartitioning())
     marker = grad_comm.GradMarker(grad_axes)
     params = marker.begin(params)
     mark = marker.mark
     h = x
     skips = []
+    cur = plan.stage_for(0)
     for lvl in range(cfg.depth):
+        st = plan.stage_for(lvl)
+        if st != cur:
+            h, _ = reshard.apply(h, cur, st, oracle=reshard_oracle)
+            cur = st
         h = _conv_bn_relu(h, params[f"enc{lvl}_w0"], params[f"enc{lvl}_s0"],
-                          params[f"enc{lvl}_b0"], part, bn_axes, use_pallas,
-                          overlap, mark)
+                          params[f"enc{lvl}_b0"], cur.part, bn_axes,
+                          use_pallas, overlap, mark)
         h = _conv_bn_relu(h, params[f"enc{lvl}_w1"], params[f"enc{lvl}_s1"],
-                          params[f"enc{lvl}_b1"], part, bn_axes, use_pallas,
-                          overlap, mark)
+                          params[f"enc{lvl}_b1"], cur.part, bn_axes,
+                          use_pallas, overlap, mark)
         skips.append(h)
-        h = maxpool3d(h, part, window=2, stride=2, overlap=overlap)
+        h = maxpool3d(h, cur.part, window=2, stride=2, overlap=overlap)
+    st = plan.stage_for(cfg.depth)
+    if st != cur:
+        h, _ = reshard.apply(h, cur, st, oracle=reshard_oracle)
+        cur = st
     h = _conv_bn_relu(h, params["mid_w0"], params["mid_s0"], params["mid_b0"],
-                      part, bn_axes, use_pallas, overlap, mark)
+                      cur.part, bn_axes, use_pallas, overlap, mark)
     h = _conv_bn_relu(h, params["mid_w1"], params["mid_s1"], params["mid_b1"],
-                      part, bn_axes, use_pallas, overlap, mark)
+                      cur.part, bn_axes, use_pallas, overlap, mark)
     for lvl in reversed(range(cfg.depth)):
-        h = deconv3d(h, mark(params[f"dec{lvl}_up"]), part, stride=2)
+        # the up-convolution is purely local in any layout; reshard back to
+        # the encoder level's stage AFTER it so the skip concat is local
+        h = deconv3d(h, mark(params[f"dec{lvl}_up"]), cur.part, stride=2)
+        st = plan.stage_for(lvl)
+        if st != cur:
+            h, _ = reshard.apply(h, cur, st, oracle=reshard_oracle)
+            cur = st
         h = jnp.concatenate([skips[lvl], h], axis=-1)
         h = _conv_bn_relu(h, params[f"dec{lvl}_w0"], params[f"dec{lvl}_s0"],
-                          params[f"dec{lvl}_b0"], part, bn_axes, use_pallas,
-                          overlap, mark)
+                          params[f"dec{lvl}_b0"], cur.part, bn_axes,
+                          use_pallas, overlap, mark)
         h = _conv_bn_relu(h, params[f"dec{lvl}_w1"], params[f"dec{lvl}_s1"],
-                          params[f"dec{lvl}_b1"], part, bn_axes, use_pallas,
-                          overlap, mark)
-    out = conv3d(h, mark(params["head_w"]), part, stride=1, overlap=overlap)
+                          params[f"dec{lvl}_b1"], cur.part, bn_axes,
+                          use_pallas, overlap, mark)
+    out = conv3d(h, mark(params["head_w"]), cur.part, stride=1,
+                 overlap=overlap)
     marker.assert_all_marked()
     return out
 
@@ -131,21 +166,25 @@ def segmentation_loss(
     x: jax.Array,
     labels: jax.Array,
     cfg: ConvNetConfig,
-    part: SpatialPartitioning,
+    part: Optional[SpatialPartitioning] = None,
     *,
+    plan: Optional[plan_lib.ParallelPlan] = None,
     bn_axes: Sequence[str] = (),
     global_voxels: int = 0,
     use_pallas: bool = False,
     overlap: Optional[bool] = None,
     grad_axes: Sequence[str] = (),
+    reshard_oracle: bool = False,
 ) -> jax.Array:
     """LOCAL per-voxel CE contribution (sum over local voxels / global voxel
     count): ``psum`` over all mesh axes yields the global mean. Labels are
     spatially sharded like the input (the paper's point: ground truth is as
-    large as the input and must be spatially distributed too)."""
-    logits = forward(params, x, cfg, part, bn_axes=bn_axes,
+    large as the input and must be spatially distributed too) — and the
+    logits come back in the input's layout whatever the plan did at deeper
+    levels, so no label resharding is ever needed."""
+    logits = forward(params, x, cfg, part, plan=plan, bn_axes=bn_axes,
                      use_pallas=use_pallas, overlap=overlap,
-                     grad_axes=grad_axes)
+                     grad_axes=grad_axes, reshard_oracle=reshard_oracle)
     logp = jax.nn.log_softmax(logits, axis=-1)
     nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
     denom = global_voxels or nll.size

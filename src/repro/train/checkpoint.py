@@ -4,21 +4,53 @@ Parameters are saved as one ``.npy`` per leaf (gathered to host) plus a
 manifest with the pytree structure; restore re-places leaves under the
 given shardings. Adequate for the example drivers; a production deployment
 would swap in tensorstore/orbax behind the same interface.
+
+Sharded-state round trip: ``save`` records each leaf's ``PartitionSpec``
+in the manifest (when the leaf is a jax.Array with a ``NamedSharding`` —
+e.g. the ZeRO-1 ``reduce_scatter`` optimizer state, dim-0 sharded over the
+data axes), and ``restore(..., mesh=...)`` re-places every such leaf under
+its recorded spec on the given mesh instead of silently replicating it.
+Explicit ``shardings`` still win when passed.
 """
 from __future__ import annotations
 
 import json
 import os
 import re
-from typing import Any, Optional
+from typing import Any, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
 
 
 def _sanitize(path: str) -> str:
     return re.sub(r"[^A-Za-z0-9_.-]", "_", path)
+
+
+def _spec_to_json(spec: PartitionSpec) -> List[Any]:
+    """PartitionSpec -> JSON: each dim entry is None, an axis name, or a
+    list of axis names."""
+    out: List[Any] = []
+    for entry in spec:
+        if entry is None or isinstance(entry, str):
+            out.append(entry)
+        else:
+            out.append(list(entry))
+    return out
+
+
+def _spec_from_json(entries: List[Any]) -> PartitionSpec:
+    return PartitionSpec(*(tuple(e) if isinstance(e, list) else e
+                           for e in entries))
+
+
+def _leaf_spec(leaf: Any) -> Optional[List[Any]]:
+    sharding = getattr(leaf, "sharding", None)
+    if isinstance(sharding, NamedSharding):
+        return _spec_to_json(sharding.spec)
+    return None
 
 
 def save(ckpt_dir: str, tree: Any, step: int = 0) -> None:
@@ -32,14 +64,23 @@ def save(ckpt_dir: str, tree: Any, step: int = 0) -> None:
         name = _sanitize(p) + ".npy"
         arr = np.asarray(jax.device_get(leaf))
         np.save(os.path.join(ckpt_dir, name), arr)
-        manifest["leaves"].append(
-            {"path": p, "file": name, "dtype": str(arr.dtype),
-             "shape": list(arr.shape)})
+        entry = {"path": p, "file": name, "dtype": str(arr.dtype),
+                 "shape": list(arr.shape)}
+        spec = _leaf_spec(leaf)
+        if spec is not None:
+            entry["spec"] = spec
+        manifest["leaves"].append(entry)
     with open(os.path.join(ckpt_dir, "manifest.json"), "w") as f:
         json.dump(manifest, f)
 
 
-def restore(ckpt_dir: str, like: Any, shardings: Optional[Any] = None) -> Any:
+def restore(ckpt_dir: str, like: Any, shardings: Optional[Any] = None,
+            *, mesh=None) -> Any:
+    """Load a tree saved by ``save``. Placement per leaf, in priority
+    order: the ``shardings`` tree (when given), the manifest's recorded
+    ``PartitionSpec`` on ``mesh`` (when given — restores ZeRO-1 sharded
+    optimizer state under the spec it was sharded with), else a plain
+    replicated ``jnp`` array."""
     with open(os.path.join(ckpt_dir, "manifest.json")) as f:
         manifest = json.load(f)
     by_path = {l["path"]: l for l in manifest["leaves"]}
@@ -47,6 +88,8 @@ def restore(ckpt_dir: str, like: Any, shardings: Optional[Any] = None) -> Any:
     def load_leaf(path, leaf, sh=None):
         entry = by_path[jax.tree_util.keystr(path)]
         arr = np.load(os.path.join(ckpt_dir, entry["file"]))
+        if sh is None and mesh is not None and "spec" in entry:
+            sh = NamedSharding(mesh, _spec_from_json(entry["spec"]))
         if sh is not None:
             return jax.device_put(arr, sh)
         return jnp.asarray(arr)

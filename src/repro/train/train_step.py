@@ -25,6 +25,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs.base import ConvNetConfig
 from repro.core import compat, flags
 from repro.core import grad_comm as grad_comm_lib
+from repro.core import plan as plan_lib
+from repro.core import reshard as reshard_lib
 from repro.core.sharding import ShardingPolicy
 from repro.core.spatial_conv import SpatialPartitioning
 from repro.models import cosmoflow as cosmoflow_lib
@@ -83,6 +85,40 @@ def make_convnet_opt_state(
         num_shards=n_data)
 
 
+def resolve_convnet_plan(
+    cfg: ConvNetConfig,
+    mesh,
+    *,
+    spatial_axes: Tuple[Optional[str], ...] = ("model", None, None),
+    data_axes: Tuple[str, ...] = ("data",),
+    plan: Optional["plan_lib.ParallelPlan"] = None,
+) -> "plan_lib.ParallelPlan":
+    """The plan a conv-net step will execute: the caller's, or the legacy
+    fixed-degree plan (with its over-decomposition gathers and replicated
+    FC head) derived from ``spatial_axes`` + the mesh degrees.
+
+    A caller-supplied plan is validated against the mesh: every axis the
+    plan references must exist with the plan's recorded degree — the
+    degrees feed ``loss_redundancy``, so a silent mismatch would scale
+    the loss (and every gradient) by the wrong factor."""
+    if plan is not None:
+        for a in plan.axis_names:
+            if a not in mesh.shape:
+                raise ValueError(
+                    f"plan {plan.name!r} references axis {a!r} missing "
+                    f"from mesh {dict(mesh.shape)}")
+            if plan.degree(a) != mesh.shape[a]:
+                raise ValueError(
+                    f"plan {plan.name!r} records {a!r} degree "
+                    f"{plan.degree(a)} but the mesh has {mesh.shape[a]}")
+        return plan
+    shards3 = tuple(mesh.shape[a] if a else 1 for a in spatial_axes)
+    return plan_lib.legacy_convnet_plan(
+        cfg, SpatialPartitioning(tuple(spatial_axes)), shards3,
+        data_axes=tuple(data_axes),
+        data_degrees=tuple(mesh.shape[a] for a in data_axes))
+
+
 def _build_convnet_step(
     cfg: ConvNetConfig,
     mesh,
@@ -95,6 +131,7 @@ def _build_convnet_step(
     overlap: Optional[bool],
     grad_comm: Optional[str],
     stage: str,  # "fwd" | "bwd" | "grad_comm" | "step"
+    plan: Optional["plan_lib.ParallelPlan"] = None,
 ):
     """Common builder for the train step and its phase probes.
 
@@ -103,15 +140,20 @@ def _build_convnet_step(
     reduction (returning the reduced grad tree); ``step`` adds the
     optimizer update. Successive timing differences attribute the e2e
     cost to fwd / bwd / grad-comm / optimizer (benchmarks/run.py).
+
+    ``plan`` selects the per-stage parallelism plan (DESIGN.md §5); the
+    default is the legacy fixed-degree plan over ``spatial_axes``. A plan
+    overrides ``spatial_axes``/``data_axes`` with its first stage's layout
+    (inputs are sharded for stage 0; later stages reshard in-graph).
     """
     mode = _resolve_grad_comm(grad_comm)
-    part = SpatialPartitioning(tuple(spatial_axes))
-    spatial_names = tuple(a for a in spatial_axes if a)
-    all_axes = tuple(data_axes) + spatial_names
-    n_spatial = 1
-    for a in spatial_names:
-        n_spatial *= mesh.shape[a]
-    shards3 = tuple(mesh.shape[a] if a else 1 for a in spatial_axes)
+    plan = resolve_convnet_plan(cfg, mesh, spatial_axes=spatial_axes,
+                                data_axes=data_axes, plan=plan)
+    entry = plan.stages[0]
+    spatial_axes = tuple(entry.spatial_axes)
+    data_axes = tuple(entry.batch_axes)
+    spatial_names = plan.spatial_axis_names
+    all_axes = plan.axis_names
     n_data = 1
     for a in data_axes:
         n_data *= mesh.shape[a]
@@ -129,7 +171,8 @@ def _build_convnet_step(
     else:
         model_grad_axes = ()
 
-    plan = convnet_grad_plan(cfg) if mode == "reduce_scatter" else None
+    bucket_plan = (convnet_grad_plan(cfg) if mode == "reduce_scatter"
+                   else None)
 
     def local_step(params, opt_state, x, y, seed):
         # dropout rng is NOT folded per-device: masks are derived per global
@@ -144,9 +187,8 @@ def _build_convnet_step(
         if cfg.arch == "cosmoflow":
             def loss_fn(p):
                 return cosmoflow_lib.mse_loss(
-                    p, x, y, cfg, part, bn_axes=all_axes,
-                    global_batch=global_batch, spatial_size=n_spatial,
-                    spatial_shards=shards3, sample_ids=sample_ids,
+                    p, x, y, cfg, plan=plan, bn_axes=all_axes,
+                    global_batch=global_batch, sample_ids=sample_ids,
                     train=True, dropout_rng=rng, use_pallas=use_pallas,
                     overlap=overlap, grad_axes=model_grad_axes)
         else:
@@ -154,7 +196,7 @@ def _build_convnet_step(
 
             def loss_fn(p):
                 return unet_lib.segmentation_loss(
-                    p, x, y, cfg, part, bn_axes=all_axes,
+                    p, x, y, cfg, plan=plan, bn_axes=all_axes,
                     global_voxels=gv, use_pallas=use_pallas,
                     overlap=overlap, grad_axes=model_grad_axes)
 
@@ -177,14 +219,14 @@ def _build_convnet_step(
             if mode == "reduce_scatter":
                 # pure-comm probe: scatter + gather, no optimizer math
                 shards = grad_comm_lib.reduce_scatter_grads(
-                    grads, plan, data_axes)
+                    grads, bucket_plan, data_axes)
                 grads = grad_comm_lib.all_gather_params(
-                    shards, plan, data_axes, grads)
+                    shards, bucket_plan, data_axes, grads)
             return loss, grads
 
         if mode == "reduce_scatter":
             new_params, new_opt = grad_comm_lib.sharded_update(
-                optimizer, grads, opt_state, params, plan, data_axes)
+                optimizer, grads, opt_state, params, bucket_plan, data_axes)
         else:
             new_params, new_opt = optimizer.update(grads, opt_state, params)
         return new_params, new_opt, loss
@@ -199,7 +241,7 @@ def _build_convnet_step(
         # ZeRO-1 memory win); scalars (step count) replicated.
         state_shapes = jax.eval_shape(
             lambda: grad_comm_lib.init_sharded_opt_state(
-                optimizer, plan, num_shards=n_data))
+                optimizer, bucket_plan, num_shards=n_data))
         shard_spec = P(tuple(data_axes))
         opt_spec = jax.tree.map(
             lambda s: P() if s.ndim == 0 else shard_spec, state_shapes)
@@ -227,20 +269,23 @@ def make_convnet_train_step(
     use_pallas: bool = False,
     overlap: Optional[bool] = None,  # halo mode: None -> flags overlap_halo
     grad_comm: Optional[str] = None,  # None -> flags grad_comm
+    plan: Optional["plan_lib.ParallelPlan"] = None,  # DESIGN.md §5
     jit: bool = True,
 ):
     """Returns step(params, opt_state, x, y, rng) -> (params, opt, loss).
 
-    x: (N, D, H, W, C) sharded (data..., spatial...); y: (N, out) or voxel
-    labels (N, D, H, W) for unet. ``grad_comm="reduce_scatter"`` steps
-    expect ``opt_state`` from ``make_convnet_opt_state`` (flat ZeRO-1
-    bucket state); the other modes take ``optimizer.init(params)``.
+    x: (N, D, H, W, C) sharded for the plan's first stage (data...,
+    spatial...); y: (N, out) or voxel labels (N, D, H, W) for unet.
+    ``grad_comm="reduce_scatter"`` steps expect ``opt_state`` from
+    ``make_convnet_opt_state`` (flat ZeRO-1 bucket state); the other
+    modes take ``optimizer.init(params)``. ``plan`` selects a per-stage
+    parallelism plan and overrides ``spatial_axes``/``data_axes``.
     """
     mapped = _build_convnet_step(
         cfg, mesh, optimizer, spatial_axes=spatial_axes,
         data_axes=data_axes, global_batch=global_batch,
         use_pallas=use_pallas, overlap=overlap, grad_comm=grad_comm,
-        stage="step")
+        stage="step", plan=plan)
     if not jit:
         return mapped
     return jax.jit(mapped, donate_argnums=(0, 1))
@@ -257,6 +302,7 @@ def make_convnet_phase_probes(
     use_pallas: bool = False,
     overlap: Optional[bool] = None,
     grad_comm: Optional[str] = None,
+    plan: Optional["plan_lib.ParallelPlan"] = None,
 ) -> Dict[str, Callable]:
     """Jitted probes isolating the train-step phases for attribution:
     ``fwd`` (loss only), ``bwd`` (+backward, no reduction), ``grad_comm``
@@ -269,7 +315,7 @@ def make_convnet_phase_probes(
             cfg, mesh, optimizer, spatial_axes=spatial_axes,
             data_axes=data_axes, global_batch=global_batch,
             use_pallas=use_pallas, overlap=overlap, grad_comm=grad_comm,
-            stage=stage))
+            stage=stage, plan=plan))
         for stage in ("fwd", "bwd", "grad_comm", "step")
     }
 
@@ -283,31 +329,39 @@ def make_convnet_eval_step(
     global_batch: int,
     use_pallas: bool = False,
     overlap: Optional[bool] = None,
+    plan: Optional["plan_lib.ParallelPlan"] = None,
 ):
-    """Returns eval(params, x, y) -> (loss, preds) (cosmoflow only)."""
-    part = SpatialPartitioning(tuple(spatial_axes))
-    spatial_names = tuple(a for a in spatial_axes if a)
-    all_axes = tuple(data_axes) + spatial_names
-    n_spatial = 1
-    for a in spatial_names:
-        n_spatial *= mesh.shape[a]
+    """Returns eval(params, x, y) -> (loss, preds) (cosmoflow only).
 
-    shards3 = tuple(mesh.shape[a] if a else 1 for a in spatial_axes)
+    Under a plan whose CNN->FC transition repartitions the spatial group
+    into the batch, ``preds`` comes back sharded over the FC stage's batch
+    axes (each sample computed exactly once)."""
+    plan = resolve_convnet_plan(cfg, mesh, spatial_axes=spatial_axes,
+                                data_axes=data_axes, plan=plan)
+    entry = plan.stages[0]
+    spatial_axes = tuple(entry.spatial_axes)
+    data_axes = tuple(entry.batch_axes)
+    all_axes = plan.axis_names
+    redundancy = plan.loss_redundancy
+    fc_batch = plan.final_stage.batch_axes
 
     def local_eval(params, x, y):
         pred = cosmoflow_lib.forward(
-            params, x, cfg, part, bn_axes=all_axes, train=False,
-            spatial_shards=shards3, use_pallas=use_pallas, overlap=overlap)
+            params, x, cfg, plan=plan, bn_axes=all_axes, train=False,
+            use_pallas=use_pallas, overlap=overlap)
+        y = reshard_lib.shard_batch(y, plan.batch_extension_axes)
         per = jnp.mean(jnp.square(pred - y), axis=-1)
-        loss = lax.psum(jnp.sum(per) / (global_batch * n_spatial), all_axes)
+        loss = lax.psum(jnp.sum(per) / (global_batch * redundancy),
+                        all_axes)
         return loss, pred
 
     dspec = data_axes if len(data_axes) > 1 else data_axes[0]
+    fc_dspec = fc_batch if len(fc_batch) > 1 else fc_batch[0]
     x_spec = P(dspec, *spatial_axes, None)
     return jax.jit(compat.shard_map(
         local_eval, mesh=mesh,
         in_specs=(P(), x_spec, P(dspec, None)),
-        out_specs=(P(), P(dspec, None)),
+        out_specs=(P(), P(fc_dspec, None)),
     ))
 
 
