@@ -18,6 +18,10 @@
                         all_to_all reshard micro vs the all_gather oracle,
                         planned vs fixed-degree e2e CosmoFlow step, and
                         the planner's cost-model choice at paper scale
+  memory                memory subsystem (DESIGN.md §9): modeled-vs-
+                        measured peak bytes, step time x precision x
+                        remat on the CPU smoke, and the budgeted
+                        planner's capacity argument at paper scale
 
 Output: ``name,us_per_call,derived`` CSV rows (derived = the figure's
 headline quantity). Run: ``PYTHONPATH=src python -m benchmarks.run
@@ -769,6 +773,112 @@ def bench_plan(quick=False):
          f"chosen_speedup={fixed_cost/chosen.cost:.3f}x")
 
 
+# ------------------------------------------------------------- memory -----
+def bench_memory(quick=False):
+    """Memory subsystem (DESIGN.md §9), three views.
+
+    1. model-vs-measured: the analytic plan walk against the
+       jaxpr-liveness scan of the real forward+backward, across
+       precision x remat (the 15% validation contract, as data).
+    2. e2e step time x precision x remat on the 1-device CPU smoke —
+       the recompute and cast costs the budgeted planner trades away
+       against peak bytes (fp16 is typically SLOW on CPU: no vector
+       units for half floats; the row exists to price that honestly).
+    3. the capacity argument at paper scale, analytically: pure data
+       parallelism over-budget for 256^3 CosmoFlow, the budgeted
+       planner's (higher-spatial-degree / remat / precision) choice
+       fitting the same budget.
+    """
+    import dataclasses
+
+    from repro import configs
+    from repro.core import compat as compat_lib
+    from repro.core import memory as memory_lib
+    from repro.core import plan as plan_lib
+    from repro.core.perf_model import V100
+    from repro.models import cosmoflow
+    from repro.optim.adam import Adam, constant
+    from repro.train.train_step import (make_convnet_opt_state,
+                                        make_convnet_train_step)
+
+    cfg = dataclasses.replace(configs.get_smoke_config("cosmoflow-512"),
+                              input_width=16 if quick else 32)
+    gb, W = 2, cfg.input_width
+    x = jax.random.normal(jax.random.PRNGKey(0),
+                          (gb, W, W, W, cfg.in_channels))
+    y = jax.random.normal(jax.random.PRNGKey(1), (gb, cfg.out_dim))
+    p0 = cosmoflow.init_params(jax.random.PRNGKey(2), cfg)
+    base = plan_lib.uniform_plan(cfg, spatial_axes=(None, None, None))
+    remat = dataclasses.replace(base, stages=tuple(
+        dataclasses.replace(s, remat=True) for s in base.stages))
+
+    # 1. model vs measured (grad path; optimizer state is exact arithmetic)
+    for tag, pl, prec in (("fp32", base, None), ("fp32_remat", remat, None),
+                          ("bf16", base, "bf16"),
+                          ("bf16_remat", remat, "bf16")):
+        fn = jax.value_and_grad(
+            lambda p, _pl=pl, _pr=prec: cosmoflow.mse_loss(
+                p, x, y, cfg, plan=_pl, global_batch=gb, train=False,
+                precision=_pr))
+        meas = memory_lib.trace_peak_bytes(fn, p0)
+        model = memory_lib.plan_peak_bytes(
+            cfg, pl, global_batch=gb, precision=prec,
+            include_optimizer=False).total
+        emit(f"memory.model_vs_measured.{tag}", 0.0,
+             f"measured_MiB={meas / 2 ** 20:.2f};"
+             f"model_MiB={model / 2 ** 20:.2f};ratio={model / meas:.3f}")
+
+    # 2. step time x precision x remat (1-device smoke)
+    mesh = compat_lib.make_mesh((1, 1), ("data", "model"))
+    base_m = plan_lib.uniform_plan(cfg)  # degree-1 'model'/'data' axes
+    remat_m = dataclasses.replace(base_m, stages=tuple(
+        dataclasses.replace(s, remat=True) for s in base_m.stages))
+    reps = 3 if quick else 6
+    t0 = {}
+    for prec in ("fp32", "bf16", "fp16"):
+        for tag, pl in (("", base_m), ("_remat", remat_m)):
+            opt = Adam(lr=constant(1e-3), grad_clip=1.0)
+            step = jax.jit(make_convnet_train_step(
+                cfg, mesh, opt, global_batch=gb, plan=pl, precision=prec,
+                jit=False))
+            st = make_convnet_opt_state(cfg, opt, p0, mesh=mesh,
+                                        precision=prec)
+            us = _timeit(lambda: step(p0, st, x, y,
+                                      jnp.asarray(0, jnp.int32))[2],
+                         reps=reps)
+            peak = memory_lib.plan_peak_bytes(
+                cfg, pl, global_batch=gb, precision=prec)
+            key = f"{prec}{tag}"
+            t0[key] = us
+            rel = (f"rel={t0['fp32'] / us:.3f}x_vs_fp32;"
+                   if key != "fp32" else f"W={W};")
+            emit(f"memory.step.{key}", us,
+                 f"{rel}modeled_peak_MiB={peak.total / 2 ** 20:.2f}")
+
+    # 3. the capacity argument at paper scale (analytic, V100 16 GiB)
+    pcfg = configs.get_config("cosmoflow-256")
+    pgb = 4
+    dp = memory_lib.data_parallel_peak_bytes(pcfg, global_batch=pgb,
+                                             num_gpus=4)
+    budget = 0.5 * dp.total
+    emit("memory.capacity.pure_dp.cosmoflow256", 0.0,
+         f"peak_GiB={dp.total / 2 ** 30:.2f};budget_GiB="
+         f"{budget / 2 ** 30:.2f};over_budget={dp.total / budget:.2f}x")
+    chosen = plan_lib.plan_convnet(
+        pcfg, V100, spatial_degree=1, data_degree=4, global_batch=pgb,
+        memory_budget_bytes=budget, spatial_options=(1, 2, 4, 8),
+        precisions=("fp32", "bf16"))
+    peak = memory_lib.plan_peak_bytes(pcfg, chosen, global_batch=pgb)
+    ways = 1
+    for a in chosen.spatial_axis_names:
+        ways *= chosen.degree(a)
+    emit("memory.capacity.budgeted.cosmoflow256", 0.0,
+         f"{chosen.name};spatial={ways};"
+         f"remat={any(s.remat for s in chosen.stages)};"
+         f"peak_GiB={peak.total / 2 ** 30:.2f};"
+         f"fits={peak.total <= budget}")
+
+
 BENCHES = {
     "fig4_strong_scaling": bench_fig4_strong_scaling,
     "fig7_unet_strong": bench_fig7_unet_strong,
@@ -781,6 +891,7 @@ BENCHES = {
     "conv_overlap": bench_conv_overlap,
     "grad_comm": bench_grad_comm,
     "plan": bench_plan,
+    "memory": bench_memory,
 }
 
 

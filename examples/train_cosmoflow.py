@@ -23,10 +23,9 @@ from jax.sharding import PartitionSpec as P
 
 from repro import configs
 from repro.configs.base import ConvNetConfig
-from repro.core import plan as plan_lib
-from repro.core.perf_model import V100
 from repro.data import pipeline, store, synthetic
 from repro.launch.mesh import make_local_mesh
+from repro.launch.planner_cli import add_planner_args, resolve_plan
 from repro.models import cosmoflow
 from repro.optim.adam import Adam, linear_decay
 from repro.train import checkpoint
@@ -54,22 +53,13 @@ def main():
     ap.add_argument("--num-train", type=int, default=32)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--eval-every", type=int, default=50)
-    ap.add_argument("--plan", action="store_true",
-                    help="let the cost model pick a per-stage parallelism "
-                         "plan (DESIGN.md §5) instead of the fixed degree")
+    add_planner_args(ap)
     args = ap.parse_args()
 
     cfg = big_config(args.width)
     print(f"model {cfg.name}: {cfg.param_count()/1e6:.1f}M params")
     mesh = make_local_mesh(model=args.model, data=args.data)
-
-    plan = None
-    if args.plan:
-        plan = plan_lib.plan_convnet(
-            cfg, V100, spatial_degree=args.model, data_degree=args.data,
-            global_batch=args.batch)
-        print(f"plan: {plan.name} (model cost {plan.cost * 1e3:.2f} ms/iter)"
-              f" stages={[(s.start, s.stop) for s in plan.stages]}")
+    plan, precision = resolve_plan(args, cfg)
 
     with tempfile.TemporaryDirectory() as d:
         n = args.num_train
@@ -84,13 +74,14 @@ def main():
         opt = Adam(lr=linear_decay(1e-3, args.steps), grad_clip=1.0)
         step = make_convnet_train_step(
             cfg, mesh, opt, spatial_axes=("model", None, None),
-            data_axes=("data",), global_batch=args.batch, plan=plan)
+            data_axes=("data",), global_batch=args.batch, plan=plan,
+            precision=precision)
         evalf = make_convnet_eval_step(
             cfg, mesh, spatial_axes=("model", None, None),
-            data_axes=("data",), global_batch=8)
+            data_axes=("data",), global_batch=8, precision=precision)
         params = cosmoflow.init_params(jax.random.PRNGKey(0), cfg)
         opt_state = make_convnet_opt_state(cfg, opt, params,
-                                           mesh=mesh)
+                                           mesh=mesh, precision=precision)
 
         xe, ye = loader.load_batch(np.arange(n, n + 8))
         t0 = time.time()
@@ -115,8 +106,10 @@ def main():
                 ev_loss, _ = evalf(params, xe, ye)
                 print(f"  eval mse {float(ev_loss):.4f}")
         if args.ckpt:
-            checkpoint.save(args.ckpt, params, step=args.steps)
-            print(f"checkpoint -> {args.ckpt}")
+            # fp32 master weights + the precision policy in the manifest
+            checkpoint.save(args.ckpt, params, step=args.steps,
+                            precision=precision)
+            print(f"checkpoint -> {args.ckpt} (precision={precision})")
     print("done.")
 
 

@@ -18,6 +18,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro import configs
 from repro.data import pipeline, store, synthetic
+from repro.launch.planner_cli import add_planner_args, resolve_plan
 from repro.models import unet3d
 from repro.optim.adam import Adam, linear_decay
 from repro.train.train_step import (make_convnet_opt_state,
@@ -30,12 +31,14 @@ def main():
     ap.add_argument("--data", type=int, default=1)
     ap.add_argument("--model", type=int, default=1)
     ap.add_argument("--batch", type=int, default=2)
+    add_planner_args(ap)
     args = ap.parse_args()
 
     cfg = configs.get_smoke_config("unet3d-256")
     mesh = compat.make_mesh((args.data, args.model), ("data", "model"))
     print(f"{cfg.name}: {cfg.param_count()/1e3:.0f}k params, "
           f"mesh {dict(mesh.shape)}")
+    plan, precision = resolve_plan(args, cfg)
 
     with tempfile.TemporaryDirectory() as d:
         cubes, labels = synthetic.make_segmentation_dataset(
@@ -50,10 +53,11 @@ def main():
         opt = Adam(lr=linear_decay(1e-3, args.steps))
         step = make_convnet_train_step(
             cfg, mesh, opt, spatial_axes=("model", None, None),
-            data_axes=("data",), global_batch=args.batch)
+            data_axes=("data",), global_batch=args.batch, plan=plan,
+            precision=precision)
         params = unet3d.init_params(jax.random.PRNGKey(0), cfg)
         opt_state = make_convnet_opt_state(cfg, opt, params,
-                                           mesh=mesh)
+                                           mesh=mesh, precision=precision)
         order = loader.epoch_schedule()
         for i in range(args.steps):
             ids = order[(i * args.batch) % 8:(i * args.batch) % 8

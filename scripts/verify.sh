@@ -69,4 +69,38 @@ EOF
 # planned-vs-fixed e2e parity (the reshard equivalence contract)
 python -m pytest -q tests/test_plan.py -k "parity" -x
 
+echo "== memory gate =="
+# DESIGN.md §9: with a budget below the pure-data-parallel peak for
+# 256^3 CosmoFlow, the budgeted planner must return a plan whose
+# MODELED peak fits the budget (the paper's capacity argument; no real
+# OOM involved). Explicit exit, not assert (PYTHONOPTIMIZE-safe).
+python - <<'EOF'
+import sys
+
+from repro import configs
+from repro.core import memory, plan as plan_lib
+from repro.core.perf_model import V100
+
+cfg = configs.get_config("cosmoflow-256")
+gb = 4
+dp = memory.data_parallel_peak_bytes(cfg, global_batch=gb, num_gpus=4)
+budget = 0.5 * dp.total
+chosen = plan_lib.plan_convnet(
+    cfg, V100, spatial_degree=1, data_degree=4, global_batch=gb,
+    memory_budget_bytes=budget, spatial_options=(1, 2, 4, 8),
+    precisions=("fp32", "bf16"))
+peak = memory.plan_peak_bytes(cfg, chosen, global_batch=gb)
+if peak.total > budget:
+    sys.exit(f"memory gate: chosen {chosen.name} peaks at "
+             f"{peak.total / 2 ** 30:.2f}GiB over the "
+             f"{budget / 2 ** 30:.2f}GiB budget")
+print(f"memory gate OK: {chosen.name} {peak.total / 2 ** 30:.2f}GiB <= "
+      f"budget {budget / 2 ** 30:.2f}GiB "
+      f"(pure-DP {dp.total / 2 ** 30:.2f}GiB would not fit)")
+EOF
+
+# remat equivalence (the §9 recompute contract) + model-vs-measured 15%
+python -m pytest -q tests/test_memory.py -x \
+    -k "remat_grad_parity or within_15pct"
+
 echo "verify: OK"

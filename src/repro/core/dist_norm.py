@@ -34,9 +34,13 @@ def distributed_batchnorm(
     n_local = 1
     for d in reduce_dims:
         n_local *= x.shape[d]
-    s = jnp.sum(x, axis=reduce_dims)
-    ss = jnp.sum(jnp.square(x), axis=reduce_dims)
-    n = jnp.asarray(n_local, dtype=x.dtype)
+    # statistics in fp32 regardless of the activation dtype (bf16/fp16
+    # sums of squares overflow/round badly); a pure no-op for fp32
+    # inputs, so the oracle's psum order is untouched (DESIGN.md §9).
+    xf = x.astype(jnp.float32)
+    s = jnp.sum(xf, axis=reduce_dims)
+    ss = jnp.sum(jnp.square(xf), axis=reduce_dims)
+    n = jnp.asarray(n_local, dtype=jnp.float32)
     # NOTE: per-tensor, per-axis psums, kept exactly as the equivalence
     # oracles pin them (fusing the triple into one collective perturbs
     # fp32 reduction order past the 1e-5 contracts). Reducing over a
@@ -46,8 +50,8 @@ def distributed_batchnorm(
         s = lax.psum(s, ax)
         ss = lax.psum(ss, ax)
         n = lax.psum(n, ax)
-    mean = s / n
-    var = jnp.maximum(ss / n - jnp.square(mean), 0.0)
+    mean = (s / n).astype(x.dtype)
+    var = jnp.maximum(ss / n - jnp.square(s / n), 0.0).astype(x.dtype)
     slope = 1.0 if activation_slope is None else activation_slope  # 1 = identity
     if use_pallas:
         from repro.kernels.bn_act import ops as bn_ops

@@ -6,7 +6,10 @@
   the roofline. Runtime training keeps the rolled loop (smaller programs).
 * ``remat``: wrap each layer body in ``jax.checkpoint`` (recompute
   activations in backward) — the standard memory/compute trade; without it
-  the 4k-train shapes hold every layer's activations live.
+  the 4k-train shapes hold every layer's activations live. Sequence
+  models apply it through ``maybe_remat``; conv nets honor it per block
+  whenever their ``ParallelPlan`` sets no stage-level ``remat`` of its
+  own (a plan that does set one wins outright — DESIGN.md §9).
 * ``overlap_halo``: lower distributed convs via the interior/boundary
   decomposition with packed halo exchange (DESIGN.md §3) instead of the
   blocking exchange-concat-conv. On by default; the blocking path remains

@@ -1,0 +1,354 @@
+"""Per-device activation-memory model + traced-program measurement
+(DESIGN.md §9).
+
+The paper's headline argument is about *capacity*, not just speed:
+hybrid (batch+spatial) parallelism aggregates the memory of the whole
+spatial group, which is what makes full-resolution 512^3 samples
+trainable at all (Table I: 52.7 GiB/sample against a 16 GiB V100).
+This module prices that argument so the planner (``core/plan.py``) can
+optimize iteration time *subject to a memory budget* instead of
+assuming every candidate fits.
+
+Two halves:
+
+* **Model** — ``plan_peak_bytes`` walks a ``ParallelPlan`` layer by
+  layer and returns the predicted peak per-device bytes at the start of
+  the backward pass (the liveness peak of reverse-mode AD): every
+  layer's saved-for-backward residuals under the stage's batch/spatial
+  sharding, plus params (fp32 masters + the precision policy's compute
+  copy), gradients, optimizer state (PR-2's ZeRO-1 accounting), and a
+  backward working-set term. A stage marked ``remat`` saves only each
+  block's *input* and recomputes the internals in backward — its
+  internals move from the resident sum into the transient term.
+
+* **Measurement** — ``trace_peak_bytes`` replays the *actual traced
+  program*: it runs a last-use liveness scan over the jaxpr of the real
+  forward+backward (inlining ``pjit``/``remat2``/``shard_map`` bodies;
+  shard_map bodies carry per-device local shapes, so the result is peak
+  bytes per device), taking the max over program points of live buffer
+  bytes. It knows nothing of the analytic model — what jax saved for
+  backward, dropout masks, BN statistics, remat recompute transients
+  all fall out of the jaxpr — which makes it the validation oracle:
+  ``tests/test_memory.py`` pins model-vs-measured within 15% across
+  remat on/off, precisions, and plans.
+
+The model intentionally shares its layer walk with ``perf_model`` (the
+same ``cosmoflow_layers``/``unet_layers`` structure the planner prices
+for time), so a plan's time and memory can never desync from each
+other.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, List, Optional, Sequence, Tuple, Union
+
+import jax
+
+from repro.configs.base import ConvNetConfig
+from repro.core import perf_model, precision as precision_lib
+
+# Structural coefficients, calibrated once against the jaxpr-liveness
+# measurement over {cosmoflow W16/W32, unet} x {fp32, bf16} x {remat
+# on/off} (max error 12%; tests pin model-vs-measured within 15%):
+#
+# _SAVED_PER_BLOCK — float residuals a conv block keeps per output-sized
+# tensor beyond its input: the conv output (for the BN backward) and the
+# activation output (for the pooling / next conv backward).
+_SAVED_PER_BLOCK = 2.0
+# _WORKING_SET_COPIES — concurrent output-sized copies while one block's
+# forward+backward is in flight (padded conv operands, BN intermediates,
+# select masks, cotangents). The liveness scans show ~4-5 copies of the
+# largest block's output at the peak program point.
+_WORKING_SET_COPIES = 4.25
+
+
+@dataclasses.dataclass(frozen=True)
+class MemoryBreakdown:
+    """Predicted peak per-device bytes, by source. ``activations`` is the
+    resident saved-for-backward sum; ``workspace`` the transient max
+    (backward working set, remat recompute)."""
+
+    params: int
+    param_copy: int      # low-precision compute copy (0 for fp32)
+    grads: int
+    opt_state: int
+    activations: int
+    workspace: int
+
+    @property
+    def total(self) -> int:
+        """Peak bytes. Activations and gradients do NOT peak together:
+        the activation peak sits in the deepest blocks' forward/backward
+        (no gradients produced yet) and the gradient tree is complete
+        only after the residuals have been freed — so the two compete
+        under a max, while params/copies/optimizer state are resident
+        throughout."""
+        return (self.params + self.param_copy + self.opt_state
+                + max(self.activations + self.workspace, self.grads))
+
+    @property
+    def gib(self) -> float:
+        return self.total / 2 ** 30
+
+    def describe(self) -> str:
+        g = 2.0 ** 30
+        return (f"total={self.total / g:.3f}GiB (act={self.activations / g:.3f}"
+                f" ws={self.workspace / g:.3f} params={self.params / g:.3f}"
+                f" copy={self.param_copy / g:.3f} grads={self.grads / g:.3f}"
+                f" opt={self.opt_state / g:.3f})")
+
+
+# --------------------------------------------------------------- model ----
+def _plan_entries(cfg: ConvNetConfig, plan) -> List[Tuple[Any, Any]]:
+    """(ConvLayer-or-None, Stage) per priced entry, mirroring
+    ``plan.plan_schedule``'s layer->stage mapping (cosmoflow: conv blocks
+    + the FC head entry; unet: encoder/bottleneck/decoder with the deconv
+    charged to the deeper level's stage). Deconv entries never inherit a
+    stage's ``remat`` — the runtime keeps up-convolutions outside the
+    checkpointed bodies (``plan.plan_remat_schedule`` agrees), so their
+    residuals must stay in the resident sum."""
+    if cfg.arch == "cosmoflow":
+        layers = perf_model.cosmoflow_layers(cfg)
+        out = [(l, plan.stage_for(i)) for i, l in enumerate(layers)]
+        out.append((None, plan.stage_for(len(layers))))
+        return out
+    layers = perf_model.unet_layers(cfg)
+
+    def no_remat(st):
+        return dataclasses.replace(st, remat=False) if st.remat else st
+
+    stages = []
+    for lvl in range(cfg.depth):            # encoder: 2 convs per level
+        stages += [plan.stage_for(lvl)] * 2
+    stages += [plan.stage_for(cfg.depth)] * 2   # bottleneck
+    for lvl in reversed(range(cfg.depth)):  # decoder: deconv + 2 convs
+        stages += [no_remat(plan.stage_for(lvl + 1))] \
+            + [plan.stage_for(lvl)] * 2
+    return list(zip(layers, stages))
+
+
+def _stage_divisors(plan, st) -> Tuple[int, int]:
+    """(spatial divisor of the voxel volume, batch divisor) for ``st``."""
+    vox = 1
+    for a in st.spatial_names:
+        vox *= plan.degree(a)
+    batch = 1
+    for a in st.batch_axes:
+        batch *= plan.degree(a)
+    return vox, batch
+
+
+def plan_peak_bytes(
+    cfg: ConvNetConfig,
+    plan,
+    *,
+    global_batch: int,
+    grad_comm: str = "overlap",
+    precision: Union[str, "precision_lib.PrecisionPolicy", None] = None,
+    include_optimizer: bool = True,
+) -> MemoryBreakdown:
+    """Predicted peak per-device bytes of one training step under
+    ``plan`` (DESIGN.md §9).
+
+    The activation peak of reverse-mode AD: every saved-for-backward
+    residual resident at once, plus the working set of the block whose
+    forward/backward is in flight. Per conv block the residuals are the
+    block *input* (for the filter gradient) plus ``_SAVED_PER_BLOCK``
+    output-sized tensors (conv output for the BN backward, activation
+    output for the pooling backward), all under the stage's sharding. A
+    ``remat`` stage keeps only each block's input and re-materializes
+    the internals transiently inside the backward (they move into the
+    ``workspace`` term, alongside the ``_WORKING_SET_COPIES`` every
+    in-flight block pays).
+
+    ``precision`` resolves per ``core/precision.py`` (default: the
+    plan's recorded policy): activations/residuals take the compute
+    dtype's width, masters/grads/optimizer state stay fp32, and a
+    casting policy adds a params-sized compute copy.
+    """
+    pol = precision_lib.get(
+        precision if precision is not None
+        else getattr(plan, "precision", "fp32"))
+    act_bytes = pol.act_bytes
+
+    resident = 0.0   # saved-for-backward residuals
+    transient = 0.0  # max recompute/backward working set
+    entries = _plan_entries(cfg, plan)
+    for l, st in entries:
+        vox_div, batch_div = _stage_divisors(plan, st)
+        b_local = global_batch / max(batch_div, 1)
+        if l is None:
+            # FC head: flattened features + the small fc intermediates
+            last = perf_model.cosmoflow_layers(cfg)[-1]
+            w_out = last.width // last.stride // (2 if last.pooled else 1)
+            flat = w_out ** 3 * last.cout
+            fc = flat + 2 * sum(cfg.fc_dims)
+            resident += fc * b_local * act_bytes
+            continue
+        n_in = l.width ** 3 / vox_div
+        n_out = (l.width // l.stride) ** 3 / vox_div
+        saved_in = n_in * l.cin * b_local * act_bytes
+        internals = _SAVED_PER_BLOCK * n_out * l.cout * b_local * act_bytes
+        working = _WORKING_SET_COPIES * n_out * l.cout * b_local * act_bytes
+        resident += saved_in
+        if getattr(st, "remat", False):
+            # internals recomputed transiently inside this block's remat
+            # backward, on top of the block's normal working set
+            transient = max(transient, working + internals)
+        else:
+            resident += internals
+            transient = max(transient, working)
+
+    n_params = cfg.param_count()
+    params = n_params * 4                       # fp32 masters
+    param_copy = n_params * act_bytes if pol.casts_params else 0
+    grads = n_params * 4                        # fp32 via the cast transpose
+    opt = 0
+    if include_optimizer:
+        entry_vox, entry_batch = _stage_divisors(plan, plan.stages[0])
+        del entry_vox
+        opt = int(perf_model.opt_state_bytes(
+            n_params, grad_comm=grad_comm, data_degree=entry_batch))
+    return MemoryBreakdown(
+        params=int(params), param_copy=int(param_copy), grads=int(grads),
+        opt_state=opt, activations=int(resident), workspace=int(transient))
+
+
+def data_parallel_peak_bytes(
+    cfg: ConvNetConfig,
+    *,
+    global_batch: int,
+    num_gpus: int = 1,
+    grad_comm: str = "overlap",
+    precision: Union[str, None] = "fp32",
+) -> MemoryBreakdown:
+    """Peak per-device bytes under PURE data parallelism (the paper's
+    baseline that OOMs at full resolution): spatial degree 1, the batch
+    split ``num_gpus`` ways, no remat."""
+    from repro.core import plan as plan_lib  # local import: no cycle
+
+    plan = plan_lib.uniform_plan(
+        cfg, spatial_axes=("model", None, None), spatial_degrees=(1, 1, 1),
+        data_degrees=(num_gpus,))
+    return plan_peak_bytes(cfg, plan, global_batch=global_batch,
+                           grad_comm=grad_comm, precision=precision)
+
+
+# --------------------------------------------- traced-program liveness ----
+_SUBJAXPR_PRIMS = {
+    "pjit", "remat2", "remat", "closed_call", "core_call", "xla_call",
+    "custom_jvp_call", "custom_jvp_call_jaxpr",
+    "custom_vjp_call", "custom_vjp_call_jaxpr", "shard_map",
+}
+
+
+def _eqn_subjaxprs(eqn) -> List[Any]:
+    if eqn.primitive.name not in _SUBJAXPR_PRIMS:
+        return []
+    out = []
+    for v in eqn.params.values():
+        name = type(v).__name__
+        if name == "ClosedJaxpr":
+            out.append(v.jaxpr)
+        elif name == "Jaxpr":
+            out.append(v)
+    return out
+
+
+def _var_bytes(v) -> int:
+    aval = getattr(v, "aval", None)
+    shape = getattr(aval, "shape", None)
+    dtype = getattr(aval, "dtype", None)
+    if shape is None or dtype is None:
+        return 0
+    return int(math.prod(shape)) * jax.numpy.dtype(dtype).itemsize
+
+
+def _is_var(v) -> bool:
+    return hasattr(v, "aval") and type(v).__name__ not in ("Literal",)
+
+
+def _jaxpr_peak(jaxpr) -> int:
+    """Max-over-program-points live bytes of a linearly executed jaxpr.
+
+    Buffers die at their last textual use (the trace order is a valid
+    schedule); an eqn's outputs and its still-live inputs coexist. For
+    eqns carrying sub-jaxprs the inner peak is measured recursively and
+    superimposed on the outer live set minus the eqn's own inputs (the
+    sub-jaxpr counts those as its invars — same buffers)."""
+    eqns = jaxpr.eqns
+    last_use = {}
+    for idx, eqn in enumerate(eqns):
+        for v in eqn.invars:
+            if _is_var(v):
+                last_use[v] = idx
+    for v in jaxpr.outvars:
+        if _is_var(v):
+            last_use[v] = len(eqns)  # escapes: never dies here
+
+    live = {}
+    for v in tuple(jaxpr.constvars) + tuple(jaxpr.invars):
+        if _is_var(v):
+            live[v] = _var_bytes(v)
+    cur = sum(live.values())
+    peak = cur
+    for idx, eqn in enumerate(eqns):
+        subs = _eqn_subjaxprs(eqn)
+        if subs:
+            inner = max(_jaxpr_peak(s) for s in subs)
+            inv = sum(live[v] for v in {v for v in eqn.invars if _is_var(v)}
+                      if v in live)
+            peak = max(peak, cur - inv + inner)
+        add = 0
+        for v in eqn.outvars:
+            if type(v).__name__ == "DropVar" or not _is_var(v):
+                continue
+            if v not in live:
+                live[v] = _var_bytes(v)
+                add += live[v]
+        cur += add
+        peak = max(peak, cur)
+        for v in {v for v in eqn.invars if _is_var(v)}:
+            if last_use.get(v) == idx and v in live:
+                cur -= live.pop(v)
+    return peak
+
+
+def _find_shard_map(jaxpr, depth: int = 0):
+    """First shard_map body reachable through pjit wrappers (its shapes
+    are per-device local)."""
+    if depth > 4:
+        return None
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "shard_map":
+            for v in eqn.params.values():
+                if type(v).__name__ == "Jaxpr":
+                    return v
+                if type(v).__name__ == "ClosedJaxpr":
+                    return v.jaxpr
+        if eqn.primitive.name == "pjit":
+            sub = _find_shard_map(eqn.params["jaxpr"].jaxpr, depth + 1)
+            if sub is not None:
+                return sub
+    return None
+
+
+def trace_peak_bytes(fn, *args, per_device: bool = True) -> int:
+    """Measured peak bytes of ``fn(*args)``: trace to a jaxpr and run the
+    liveness scan. With ``per_device=True`` (default) and a ``shard_map``
+    in the program, the scan runs on the shard_map *body*, whose shapes
+    are per-device local — the number a device's HBM actually sees."""
+    closed = jax.make_jaxpr(fn)(*args)
+    jaxpr = closed.jaxpr
+    if per_device:
+        body = _find_shard_map(jaxpr)
+        if body is not None:
+            jaxpr = body
+    return _jaxpr_peak(jaxpr)
+
+
+__all__ = [
+    "MemoryBreakdown", "plan_peak_bytes", "data_parallel_peak_bytes",
+    "trace_peak_bytes",
+]

@@ -83,6 +83,18 @@ def reshard_time(hw: Hardware, nbytes: float, n: int,
     raise ValueError(f"reshard kind {kind!r}")
 
 
+def opt_state_bytes(n_params: int, *, grad_comm: str = "overlap",
+                    data_degree: int = 1) -> float:
+    """Adam m+v in fp32 — the PR-2 accounting, shared by
+    ``iteration_time`` and ``core/memory.py`` so the planner's time and
+    memory objectives can never disagree on it. ZeRO-1
+    (``reduce_scatter``) shards it over the data-parallel degree."""
+    total = 2.0 * n_params * 4
+    if grad_comm == "reduce_scatter":
+        total /= max(data_degree, 1)
+    return total
+
+
 @dataclasses.dataclass
 class ConvLayer:
     cin: int
@@ -129,7 +141,8 @@ def unet_layers(cfg: ConvNetConfig) -> List[ConvLayer]:
 
 def _layer_fp_time(hw: Hardware, l: ConvLayer, ways: int,
                    per_gpu_batch: float,
-                   overlap: bool = True) -> Tuple[float, float]:
+                   overlap: bool = True,
+                   act_bytes: Optional[int] = None) -> Tuple[float, float]:
     """Returns (fp_time, comp_time_only) for one forward conv.
 
     ``overlap=True`` is the paper's model — the halo transfer hides behind
@@ -147,7 +160,7 @@ def _layer_fp_time(hw: Hardware, l: ConvLayer, ways: int,
     if ways > 1 and l.width // ways >= 1:
         halo_elems = (l.kernel - l.stride) * (l.width // l.stride) ** 2 \
             * l.cin * per_gpu_batch
-        halo_bytes = max(halo_elems, 0) * hw.bytes_per_elt
+        halo_bytes = max(halo_elems, 0) * (act_bytes or hw.bytes_per_elt)
         halo_time = 2 * _sr(hw, halo_bytes)
         # halo-region compute: one boundary plane each side
         halo_flops = 2 * l.kernel ** 3 * l.cin * l.cout \
@@ -173,6 +186,8 @@ def _scheduled_fp_times(
     ways: int,
     global_batch: int,
     overlap: bool,
+    remat_schedule: Optional[Sequence[bool]] = None,
+    act_bytes: Optional[int] = None,
 ) -> Tuple[float, float, float]:
     """(fp_total, bp_total, reshard_total) under a per-layer parallelism
     ``schedule`` (DESIGN.md §5): each entry is the layer's layout —
@@ -190,6 +205,13 @@ def _scheduled_fp_times(
     reverse ``all_to_all``), ``all_gather`` forward + ``reduce_scatter``
     backward for spatial->replicated, and free for replicated->spatial
     (a local slice whose transpose is zero-padding).
+
+    ``remat_schedule`` (same length) marks rematerialized entries: their
+    forward is recomputed inside the backward pass, so their fp cost is
+    charged to bp a second time — the recompute-for-memory trade the
+    budgeted planner prices (DESIGN.md §9). ``act_bytes`` overrides the
+    activation element width (2 for bf16/fp16 plans): halo and reshard
+    traffic halves while gradients stay fp32.
     """
     n_entries = len(layers) + (1 if cfg.arch == "cosmoflow" else 0)
     if len(schedule) != n_entries:
@@ -199,6 +221,10 @@ def _scheduled_fp_times(
     bad = set(schedule) - {"spatial", "batch", "replicated"}
     if bad:
         raise ValueError(f"unknown schedule modes {sorted(bad)}")
+    if remat_schedule is not None and len(remat_schedule) != n_entries:
+        raise ValueError(
+            f"remat_schedule has {len(remat_schedule)} entries; "
+            f"expected {n_entries}")
     groups = max(num_gpus // ways, 1)
     pg_group = global_batch / groups   # per-device batch, spatial/replicated
     pg_batch = global_batch / num_gpus  # per-device batch, batch layers
@@ -213,7 +239,7 @@ def _scheduled_fp_times(
 
     fp_total = bp_total = reshard_total = 0.0
     prev = schedule[0]
-    for (l, w_in, c_in), mode in zip(entries, schedule):
+    for k, ((l, w_in, c_in), mode) in enumerate(zip(entries, schedule)):
         if mode != prev:
             # local activation entering the boundary: spatial layout holds
             # 1/ways of the volume, batch layout 1/ways of the group batch;
@@ -221,7 +247,7 @@ def _scheduled_fp_times(
             local_elems = w_in ** 3 * c_in * pg_group
             if prev in ("spatial", "batch"):
                 local_elems /= ways
-            nbytes = local_elems * hw.bytes_per_elt
+            nbytes = local_elems * (act_bytes or hw.bytes_per_elt)
             if "batch" in (prev, mode):
                 fwd = bwd = reshard_time(hw, nbytes, ways, "all_to_all")
             elif mode == "replicated":
@@ -236,13 +262,18 @@ def _scheduled_fp_times(
         if l is None:
             continue  # FC head: compute unpriced, reshard above
         if mode == "spatial":
-            fp, _ = _layer_fp_time(hw, l, ways, pg_group, overlap=overlap)
+            fp, _ = _layer_fp_time(hw, l, ways, pg_group, overlap=overlap,
+                                   act_bytes=act_bytes)
         elif mode == "batch":
-            fp, _ = _layer_fp_time(hw, l, 1, pg_batch, overlap=overlap)
+            fp, _ = _layer_fp_time(hw, l, 1, pg_batch, overlap=overlap,
+                                   act_bytes=act_bytes)
         else:
-            fp, _ = _layer_fp_time(hw, l, 1, pg_group, overlap=overlap)
+            fp, _ = _layer_fp_time(hw, l, 1, pg_group, overlap=overlap,
+                                   act_bytes=act_bytes)
         fp_total += fp
         bp_total += 2 * fp
+        if remat_schedule is not None and remat_schedule[k]:
+            bp_total += fp  # forward recomputed inside backward
     return fp_total, bp_total, reshard_total
 
 
@@ -256,6 +287,8 @@ def iteration_time(
     overlap: bool = True,  # False: serialized halo (blocking lowering)
     grad_comm: str = "overlap",  # DESIGN.md §4 gradient-reduction lowering
     schedule: Optional[Sequence[str]] = None,  # DESIGN.md §5 per-layer plan
+    remat_schedule: Optional[Sequence[bool]] = None,  # DESIGN.md §9 remat
+    act_bytes: Optional[int] = None,  # activation width (2 = bf16/fp16)
 ) -> Dict[str, float]:
     """Predicted seconds per training iteration (paper Eq. Cost).
 
@@ -281,19 +314,23 @@ def iteration_time(
     if schedule is not None:
         fp_total, bp_total, reshard_total = _scheduled_fp_times(
             cfg, hw, layers, schedule, num_gpus=num_gpus, ways=ways,
-            global_batch=global_batch, overlap=overlap)
+            global_batch=global_batch, overlap=overlap,
+            remat_schedule=remat_schedule, act_bytes=act_bytes)
     else:
+        if remat_schedule is not None:
+            raise ValueError("remat_schedule requires schedule=")
         fp_total, bp_total = 0.0, 0.0
         for l in layers:
             fp, comp = _layer_fp_time(hw, l, ways, per_gpu_batch,
-                                      overlap=overlap)
+                                      overlap=overlap, act_bytes=act_bytes)
             fp_total += fp
             # BD + BF ~ 2x the forward cost, same halo structure
             bp_total += 2 * fp
     n_params = cfg.param_count()
     grad_bytes = n_params * 4
     ar = _allreduce(hw, grad_bytes, num_gpus)
-    opt_state_bytes = 2.0 * n_params * 4  # Adam m+v, fp32
+    opt_bytes = opt_state_bytes(n_params, grad_comm=grad_comm,
+                                data_degree=groups)
     if grad_comm == "monolithic":
         gc_time, total = ar, fp_total + bp_total + ar
     elif grad_comm == "reduce_scatter":
@@ -305,12 +342,11 @@ def iteration_time(
         half = _reduce_scatter(hw, grad_bytes, groups)
         gc_time = spatial_ar + 2 * half
         total = fp_total + max(bp_total, spatial_ar + half) + half
-        opt_state_bytes /= groups  # sharded over the data-parallel degree
     else:  # "overlap"
         gc_time, total = ar, fp_total + max(bp_total, ar)
     return {
         "fp": fp_total, "bp": bp_total, "allreduce": ar,
-        "grad_comm": gc_time, "opt_state_bytes": opt_state_bytes,
+        "grad_comm": gc_time, "opt_state_bytes": opt_bytes,
         "reshard": reshard_total,
         "total": total,
         "samples_per_s": global_batch / total,

@@ -35,10 +35,11 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import List, Optional, Sequence, Tuple
+from typing import Any, List, Optional, Sequence, Tuple
 
 from repro.configs.base import ConvNetConfig
 from repro.core import perf_model
+from repro.core import precision as precision_lib
 from repro.core.spatial_conv import SpatialPartitioning
 
 AxesT = Tuple[Optional[str], Optional[str], Optional[str]]
@@ -48,12 +49,18 @@ AxesT = Tuple[Optional[str], Optional[str], Optional[str]]
 class Stage:
     """Layout of one contiguous layer range: which mesh axes shard the
     batch dim and the D/H/W dims. Axes in neither list hold replicated
-    (redundant) copies for these layers."""
+    (redundant) copies for these layers.
+
+    ``remat`` marks the stage's conv blocks for rematerialization
+    (DESIGN.md §9): each block is lowered through ``jax.checkpoint`` so
+    only its *input* is saved for backward and the internals are
+    recomputed — the planner's recompute-FLOPs-for-peak-memory trade."""
 
     start: int
     stop: int  # one past the last layer this stage covers
     spatial_axes: AxesT = (None, None, None)
     batch_axes: Tuple[str, ...] = ("data",)
+    remat: bool = False
 
     @property
     def part(self) -> SpatialPartitioning:
@@ -68,13 +75,16 @@ class Stage:
 class ParallelPlan:
     """Ordered stages covering layers ``[0, n_layers)`` plus the mesh-axis
     degrees they reference. ``cost`` is the planner's predicted iteration
-    time (None for hand-built plans)."""
+    time (None for hand-built plans); ``precision`` the training policy
+    the plan was priced for (``core/precision.py`` — activations take its
+    compute width, masters stay fp32)."""
 
     stages: Tuple[Stage, ...]
     mesh_axes: Tuple[Tuple[str, int], ...]  # (axis name, degree)
     n_layers: int
     name: str = ""
     cost: Optional[float] = None
+    precision: str = "fp32"
 
     def __post_init__(self):
         pos = 0
@@ -158,6 +168,14 @@ class ParallelPlan:
             if a not in live:
                 r *= self.degree(a)
         return r
+
+    @property
+    def uses_remat(self) -> bool:
+        """Whether any stage sets plan-level rematerialization. When
+        False, models fall back to the global ``flags.remat`` knob for
+        every conv block (DESIGN.md §9); when True, the plan's per-stage
+        choice wins outright."""
+        return any(st.remat for st in self.stages)
 
 
 # ------------------------------------------------------- plan builders ----
@@ -308,6 +326,78 @@ def plan_schedule(cfg: ConvNetConfig, plan: ParallelPlan) -> List[str]:
     return sched
 
 
+def plan_remat_schedule(cfg: ConvNetConfig, plan: ParallelPlan) -> List[bool]:
+    """Per-perf-layer remat flags aligned with ``plan_schedule``: a stage's
+    flag covers its conv blocks; the FC head and the decoder's up-convs
+    are never rematerialized (the runtime doesn't wrap them)."""
+
+    def rm(layer: int) -> bool:
+        return plan.stage_for(layer).remat
+
+    if cfg.arch == "cosmoflow":
+        n_blocks = len(cfg.conv_channels)
+        return [rm(i) for i in range(n_blocks)] + [False]
+    sched: List[bool] = []
+    for lvl in range(cfg.depth):
+        sched += [rm(lvl)] * 2
+    sched += [rm(cfg.depth)] * 2
+    for lvl in reversed(range(cfg.depth)):
+        sched += [False] + [rm(lvl)] * 2  # deconv stays un-rematerialized
+    return sched
+
+
+def price_plan(
+    cfg: ConvNetConfig,
+    hw: "perf_model.Hardware",
+    plan: ParallelPlan,
+    *,
+    global_batch: int,
+    overlap: bool = True,
+    grad_comm: str = "overlap",
+) -> float:
+    """Schedule-priced iteration time of ``plan``, including the remat
+    recompute (rematted entries pay their forward again in backward) and
+    the precision policy's activation width (bf16/fp16 halve halo and
+    reshard traffic; gradients stay fp32). Degrees are read from the
+    plan itself, so a plan is always priced for the mesh it records."""
+    ways = 1
+    for a in plan.spatial_axis_names:
+        ways *= plan.degree(a)
+    data = 1
+    for a in plan.stages[0].batch_axes:
+        data *= plan.degree(a)
+    pol = precision_lib.get(plan.precision)
+    act_bytes = None if pol.act_bytes == 4 else pol.act_bytes
+    r = perf_model.iteration_time(
+        cfg, hw, num_gpus=max(ways, 1) * data, ways=max(ways, 1),
+        global_batch=global_batch, overlap=overlap, grad_comm=grad_comm,
+        schedule=plan_schedule(cfg, plan),
+        remat_schedule=plan_remat_schedule(cfg, plan),
+        act_bytes=act_bytes)
+    return r["total"]
+
+
+def remat_variants(cfg: ConvNetConfig,
+                   plan: ParallelPlan) -> List[ParallelPlan]:
+    """Every per-stage remat assignment of ``plan`` (the no-remat original
+    first). Stages covering only the cosmoflow FC head are skipped —
+    there is nothing to rematerialize there."""
+    n_conv = plan.n_layers - (1 if cfg.arch == "cosmoflow" else 0)
+    idxs = [i for i, st in enumerate(plan.stages) if st.start < n_conv]
+    out: List[ParallelPlan] = []
+    for mask in itertools.product((False, True), repeat=len(idxs)):
+        stages = list(plan.stages)
+        for i, flag in zip(idxs, mask):
+            stages[i] = dataclasses.replace(stages[i], remat=flag)
+        name = plan.name
+        if any(mask):
+            name += ".remat" + "".join(
+                str(i) for i, f in zip(idxs, mask) if f)
+        out.append(dataclasses.replace(plan, stages=tuple(stages),
+                                       name=name))
+    return out
+
+
 def candidate_convnet_plans(
     cfg: ConvNetConfig,
     hw: "perf_model.Hardware",
@@ -367,25 +457,107 @@ def candidate_convnet_plans(
         if key in seen:
             continue
         seen.add(key)
-        r = perf_model.iteration_time(
-            cfg, hw, num_gpus=num_gpus, ways=spatial_degree,
-            global_batch=global_batch, overlap=overlap, grad_comm=grad_comm,
-            schedule=plan_schedule(cfg, plan))
-        out.append(dataclasses.replace(plan, cost=r["total"]))
+        cost = price_plan(cfg, hw, plan, global_batch=global_batch,
+                          overlap=overlap, grad_comm=grad_comm)
+        out.append(dataclasses.replace(plan, cost=cost))
     return out
 
 
 def plan_convnet(
     cfg: ConvNetConfig,
     hw: "perf_model.Hardware",
+    *,
+    memory_budget_bytes: Optional[float] = None,
+    precisions: Sequence[str] = ("fp32",),
+    spatial_options: Optional[Sequence[int]] = None,
+    remat_options: Optional[bool] = None,
     **kw,
 ) -> ParallelPlan:
     """Cost-model argmin over ``candidate_convnet_plans``. Ties break
-    toward the fewest transitions (uniform wins when equal)."""
-    cands = candidate_convnet_plans(cfg, hw, **kw)
-    if not cands:
+    toward the fewest transitions (uniform wins when equal).
+
+    With ``memory_budget_bytes`` the argmin runs over (transition point
+    x stage kinds x remat sets x precision) *subject to* the per-device
+    peak of ``core/memory.py`` fitting the budget — the paper's capacity
+    argument as an optimization constraint. ``spatial_options`` lets the
+    search also raise the spatial degree (the data degree stays fixed;
+    the group — and its aggregate memory — grows), which is how a budget
+    below the pure-data-parallel peak forces the hybrid layout instead
+    of OOMing. ``remat_options`` expands per-stage remat assignments
+    (default: only when a budget is given). Raises with the best
+    infeasible candidate's breakdown when nothing fits."""
+    prec_rank = {"fp32": 0, "bf16": 1, "fp16": 2}
+    expand_remat = (remat_options if remat_options is not None
+                    else memory_budget_bytes is not None)
+    plain = (memory_budget_bytes is None and spatial_options is None
+             and not expand_remat and tuple(precisions) == ("fp32",))
+    if plain:
+        cands = candidate_convnet_plans(cfg, hw, **kw)
+        if not cands:
+            raise ValueError(
+                "no admissible plans (spatial degree too large?)")
+        return min(cands, key=lambda p: (p.cost, len(p.stages)))
+
+    from repro.core import memory as memory_lib  # deferred: plan <-> memory
+
+    global_batch = kw["global_batch"]
+    overlap = kw.get("overlap", True)
+    grad_comm = kw.get("grad_comm", "overlap")
+    base_degree = kw.pop("spatial_degree")
+    options = tuple(spatial_options) if spatial_options else (base_degree,)
+
+    feasible: List[ParallelPlan] = []
+    best_infeasible: Optional[Tuple[ParallelPlan, Any]] = None
+    for s in options:
+        try:
+            cands = candidate_convnet_plans(cfg, hw, spatial_degree=s, **kw)
+        except ValueError:
+            continue  # degree over-decomposes layer 0: not admissible
+        for base in cands:
+            variants = (remat_variants(cfg, base) if expand_remat
+                        else [base])
+            for var in variants:
+                for prec in precisions:
+                    p = dataclasses.replace(
+                        var, precision=prec,
+                        name=(var.name if prec == "fp32"
+                              else f"{var.name}@{prec}"))
+                    if prec == "fp32" and not p.uses_remat:
+                        cost = base.cost  # identity variant: priced above
+                    else:
+                        cost = price_plan(cfg, hw, p,
+                                          global_batch=global_batch,
+                                          overlap=overlap,
+                                          grad_comm=grad_comm)
+                    p = dataclasses.replace(p, cost=cost)
+                    if memory_budget_bytes is not None:
+                        mem = memory_lib.plan_peak_bytes(
+                            cfg, p, global_batch=global_batch,
+                            grad_comm=grad_comm)
+                        if mem.total > memory_budget_bytes:
+                            if (best_infeasible is None
+                                    or mem.total < best_infeasible[1].total):
+                                best_infeasible = (p, mem)
+                            continue
+                    feasible.append(p)
+    if not feasible:
+        if best_infeasible is not None:
+            p, mem = best_infeasible
+            raise ValueError(
+                f"no plan fits memory_budget_bytes="
+                f"{memory_budget_bytes / 2 ** 30:.2f}GiB; closest is "
+                f"{p.name} at {mem.describe()} — raise the budget, the "
+                f"spatial_options, or allow lower precision")
         raise ValueError("no admissible plans (spatial degree too large?)")
-    return min(cands, key=lambda p: (p.cost, len(p.stages)))
+    # Among near-time-optimal feasible plans (within 1%), prefer the
+    # highest precision, then the fewest transitions: precision is never
+    # given away for a speedup the cost model can't distinguish from
+    # noise — only for real time (or because the budget demands it).
+    cut = min(p.cost for p in feasible) * 1.01
+    pool = [p for p in feasible if p.cost <= cut]
+    return min(pool, key=lambda p: (prec_rank.get(p.precision, 99),
+                                    int(p.uses_remat), len(p.stages),
+                                    p.cost))
 
 
 def price_fixed_degree(

@@ -1,0 +1,224 @@
+"""Mixed-precision training policies (DESIGN.md §9).
+
+The paper trains in fp32 (and §IV doubles its memory estimate for BN);
+the memory subsystem built around it makes lower-precision activations a
+*planner knob*: halving activation bytes halves the per-device peak the
+plan must fit under ``memory_budget_bytes``, exactly like raising the
+spatial degree or rematerializing a stage does. Three policies:
+
+* ``fp32`` — the numerical oracle. No casts, no scaling; every other
+  policy's loss trajectory is tested against it.
+* ``bf16`` — activations and the *compute copy* of the parameters in
+  bfloat16, master weights in fp32. bf16 shares fp32's exponent range,
+  so no loss scaling is needed; gradients come back fp32 (the cast's
+  transpose re-casts cotangents up), and the optimizer updates the fp32
+  masters directly.
+* ``fp16`` — float16 compute with **dynamic loss scaling**: the loss is
+  multiplied by a running power-of-two scale before backprop so small
+  gradients survive fp16's narrow exponent range, gradients are
+  unscaled *before* clipping (``optim/adam.py``), and any non-finite
+  gradient skips the step (params, m, v, step count all held) and
+  halves the scale; ``growth_interval`` consecutive finite steps double
+  it again.
+
+The cast discipline ("master weights"): the canonical params are ALWAYS
+fp32 (checkpoints store them — ``train/checkpoint.py`` records the
+policy in the manifest). Models cast params + inputs to
+``compute_dtype`` at entry and cast predictions back to fp32 before the
+loss, so the loss, the gradients, and the Adam update all run fp32.
+
+``MixedPrecision`` wraps an optimizer (Adam/SGD) with the scale/skip
+state machine; ``wrap_optimizer`` is a no-op for policies that need
+neither scaling nor skipping, keeping the fp32/bf16 paths bit-identical
+to the unwrapped oracle.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    """How a train step represents activations, params, and gradients."""
+
+    name: str
+    compute_dtype: Any                 # activations + param compute copies
+    master_dtype: Any = jnp.float32    # canonical params + optimizer math
+    loss_scale: float = 1.0            # initial (and static) loss scale
+    dynamic_scale: bool = False        # halve on overflow / grow when clean
+    growth_interval: int = 200         # finite steps before doubling
+    growth_factor: float = 2.0
+    backoff_factor: float = 0.5
+    max_loss_scale: float = 2.0 ** 24
+
+    @property
+    def uses_scaling(self) -> bool:
+        return self.dynamic_scale or self.loss_scale != 1.0
+
+    @property
+    def needs_wrapper(self) -> bool:
+        """Whether the optimizer must carry scale/skip state. fp32/bf16
+        run the unwrapped oracle optimizer (bit-identical updates)."""
+        return self.uses_scaling
+
+    @property
+    def act_bytes(self) -> int:
+        return jnp.dtype(self.compute_dtype).itemsize
+
+    @property
+    def casts_params(self) -> bool:
+        return jnp.dtype(self.compute_dtype) != jnp.dtype(self.master_dtype)
+
+    def cast_compute(self, tree: Any) -> Any:
+        """Float leaves -> compute dtype (the per-step compute copy).
+        Identity (no new arrays) for fp32. NOTE: models cast at each USE
+        site instead (after the §4 grad hook) so gradient psums stay
+        fp32; this whole-tree variant serves callers outside the hook
+        discipline (eval utilities, tests)."""
+        if not self.casts_params:
+            return tree
+        dt = self.compute_dtype
+
+        def cast(x):
+            if jnp.issubdtype(jnp.result_type(x), jnp.floating):
+                return x.astype(dt)
+            return x
+
+        return jax.tree.map(cast, tree)
+
+
+FP32 = PrecisionPolicy("fp32", jnp.float32)
+BF16 = PrecisionPolicy("bf16", jnp.bfloat16)
+FP16 = PrecisionPolicy("fp16", jnp.float16, loss_scale=2.0 ** 15,
+                       dynamic_scale=True)
+
+POLICIES = {p.name: p for p in (FP32, BF16, FP16)}
+
+
+def get(policy: Union[str, PrecisionPolicy, None]) -> PrecisionPolicy:
+    """Resolve a policy name (or pass a policy through). None -> fp32."""
+    if policy is None:
+        return FP32
+    if isinstance(policy, PrecisionPolicy):
+        return policy
+    if policy not in POLICIES:
+        raise ValueError(
+            f"precision={policy!r}; expected one of {sorted(POLICIES)}")
+    return POLICIES[policy]
+
+
+def all_finite(tree: Any) -> jax.Array:
+    """Scalar bool: every float leaf of ``tree`` is finite."""
+    leaves = [l for l in jax.tree.leaves(tree)
+              if jnp.issubdtype(jnp.result_type(l), jnp.floating)]
+    if not leaves:
+        return jnp.asarray(True)
+    ok = jnp.asarray(True)
+    for l in leaves:
+        ok = jnp.logical_and(ok, jnp.all(jnp.isfinite(l)))
+    return ok
+
+
+class MPState(NamedTuple):
+    """Optimizer state under ``MixedPrecision``: the inner optimizer's
+    state plus the dynamic-loss-scale machine."""
+
+    inner: Any
+    loss_scale: jax.Array   # f32 scalar
+    good_steps: jax.Array   # consecutive finite steps since last change
+
+
+def current_scale(opt_state: Any, policy: PrecisionPolicy) -> jax.Array:
+    """The loss scale a step should apply: the state's running scale when
+    the optimizer is wrapped, else the policy's static scale."""
+    if isinstance(opt_state, MPState):
+        return opt_state.loss_scale
+    return jnp.asarray(policy.loss_scale, jnp.float32)
+
+
+def next_scale(policy: PrecisionPolicy, state: MPState,
+               finite: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """(new_scale, new_good_steps) after one step with ``finite`` grads."""
+    if not policy.dynamic_scale:
+        return state.loss_scale, state.good_steps
+    grown = state.good_steps + 1 >= policy.growth_interval
+    scale_up = jnp.where(
+        grown,
+        jnp.minimum(state.loss_scale * policy.growth_factor,
+                    policy.max_loss_scale),
+        state.loss_scale)
+    new_scale = jnp.where(finite, scale_up,
+                          jnp.maximum(state.loss_scale
+                                      * policy.backoff_factor, 1.0))
+    new_good = jnp.where(jnp.logical_and(finite, jnp.logical_not(grown)),
+                         state.good_steps + 1, 0)
+    return new_scale, new_good.astype(state.good_steps.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class MixedPrecision:
+    """Optimizer wrapper: unscale-before-clip + skip-on-overflow.
+
+    ``update`` hands the current loss scale to the inner optimizer as
+    ``grad_scale`` (grads are divided by it BEFORE the clip norm — see
+    ``optim/adam.py``), then selects between the updated and the previous
+    (params, inner state) on the finiteness of the incoming gradients, so
+    an overflowed fp16 step advances nothing — not even the step count —
+    and only moves the loss scale down.
+
+    ``norm_axes`` doubles as the agreement axes for the finite check: the
+    ZeRO-1 path feeds per-device gradient *shards*, so overflow anywhere
+    must veto the step everywhere.
+    """
+
+    inner: Any
+    policy: PrecisionPolicy
+
+    def init(self, params: Any) -> MPState:
+        return MPState(self.inner.init(params),
+                       jnp.asarray(self.policy.loss_scale, jnp.float32),
+                       jnp.zeros((), jnp.int32))
+
+    def update(self, grads: Any, state: MPState, params: Any,
+               *, norm_axes: Tuple[str, ...] = ()) -> Tuple[Any, MPState]:
+        finite = all_finite(grads)
+        if norm_axes:
+            bad = lax.psum(1.0 - finite.astype(jnp.float32),
+                           tuple(norm_axes))
+            finite = bad == 0.0
+        scale = state.loss_scale if self.policy.uses_scaling else None
+        new_params, new_inner = self.inner.update(
+            grads, state.inner, params, norm_axes=norm_axes,
+            grad_scale=scale)
+
+        def keep(new, old):
+            return jax.tree.map(lambda a, b: jnp.where(finite, a, b),
+                                new, old)
+
+        new_params = keep(new_params, params)
+        new_inner = keep(new_inner, state.inner)
+        new_scale, new_good = next_scale(self.policy, state, finite)
+        return new_params, MPState(new_inner, new_scale, new_good)
+
+
+def wrap_optimizer(optimizer: Any,
+                   policy: Union[str, PrecisionPolicy, None]) -> Any:
+    """Wrap for policies that need the scale/skip machine; identity for
+    fp32/bf16 (their updates stay bit-identical to the oracle). Already
+    wrapped optimizers pass through."""
+    policy = get(policy)
+    if not policy.needs_wrapper or isinstance(optimizer, MixedPrecision):
+        return optimizer
+    return MixedPrecision(optimizer, policy)
+
+
+__all__ = [
+    "PrecisionPolicy", "FP32", "BF16", "FP16", "POLICIES", "get",
+    "all_finite", "MPState", "MixedPrecision", "wrap_optimizer",
+    "current_scale", "next_scale",
+]

@@ -1,0 +1,55 @@
+"""Shared planner CLI plumbing for the conv-net example drivers.
+
+Both ``examples/train_cosmoflow.py`` and ``examples/train_unet3d.py``
+expose the same three knobs — ``--plan`` (cost-model-chosen per-stage
+parallelism, DESIGN.md §5), ``--memory-budget`` (the §9
+memory-constrained planner), and ``--precision`` — so the argument
+definitions and the plan/precision resolution live here once.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+from repro.configs.base import ConvNetConfig
+from repro.core import memory as memory_lib
+from repro.core import plan as plan_lib
+from repro.core.perf_model import V100
+
+
+def add_planner_args(ap) -> None:
+    ap.add_argument("--plan", action="store_true",
+                    help="let the cost model pick a per-stage parallelism "
+                         "plan (DESIGN.md §5) instead of the fixed degree")
+    ap.add_argument("--memory-budget", type=float, default=None,
+                    metavar="GIB",
+                    help="per-device memory budget: the planner argmins "
+                         "time over (boundary x kind x remat x precision) "
+                         "subject to the §9 memory model fitting this")
+    ap.add_argument("--precision", default=None,
+                    choices=("fp32", "bf16", "fp16"),
+                    help="mixed-precision policy (default: fp32, or the "
+                         "budgeted plan's choice)")
+
+
+def resolve_plan(args, cfg: ConvNetConfig) -> Tuple[
+        Optional["plan_lib.ParallelPlan"], str]:
+    """(plan-or-None, precision name) for a driver's parsed args: runs
+    the (possibly memory-budgeted) planner when requested and prints its
+    choice plus the modeled per-device peak."""
+    plan = None
+    if args.plan or args.memory_budget is not None:
+        kw = dict(spatial_degree=args.model, data_degree=args.data,
+                  global_batch=args.batch)
+        if args.memory_budget is not None:
+            kw["memory_budget_bytes"] = args.memory_budget * 2 ** 30
+            kw["precisions"] = ((args.precision,) if args.precision
+                                else ("fp32", "bf16"))
+        elif args.precision:
+            kw["precisions"] = (args.precision,)
+        plan = plan_lib.plan_convnet(cfg, V100, **kw)
+        print(f"plan: {plan.name} (model cost {plan.cost * 1e3:.2f} ms/iter)"
+              f" stages={[(s.start, s.stop, s.remat) for s in plan.stages]}")
+        peak = memory_lib.plan_peak_bytes(cfg, plan,
+                                          global_batch=args.batch)
+        print(f"modeled peak/device: {peak.describe()}")
+    return plan, args.precision or (plan.precision if plan else "fp32")

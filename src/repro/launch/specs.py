@@ -70,10 +70,16 @@ def convnet_plan_for_policy(cfg: ConvNetConfig, policy, mesh,
 
 
 def conv_batch_specs(cfg: ConvNetConfig, plan, mesh, *, global_batch: int,
-                     act_dtype=jnp.bfloat16) -> Dict[str, Any]:
+                     act_dtype=None) -> Dict[str, Any]:
     """x/y ShapeDtypeStructs sharded for a plan's FIRST stage (later
     stages reshard in-graph). The batch dim falls back to replicated when
-    ``global_batch`` does not divide the stage's batch-axis product."""
+    ``global_batch`` does not divide the stage's batch-axis product.
+    ``act_dtype`` defaults to the plan's precision policy's compute dtype
+    (DESIGN.md §9) so budgeted bf16/fp16 plans get matching inputs."""
+    from repro.core import precision as precision_lib
+
+    if act_dtype is None:
+        act_dtype = precision_lib.get(plan.precision).compute_dtype
     entry = plan.stages[0]
     n_batch = 1
     for a in entry.batch_axes:

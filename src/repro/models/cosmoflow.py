@@ -26,8 +26,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ConvNetConfig
-from repro.core import dist_norm, grad_comm, reshard
+from repro.core import dist_norm, flags, grad_comm, reshard
 from repro.core import plan as plan_lib
+from repro.core import precision as precision_lib
 from repro.core.spatial_conv import (
     SpatialPartitioning,
     conv3d,
@@ -112,6 +113,7 @@ def forward(
     overlap: Optional[bool] = None,  # None -> flags.get("overlap_halo")
     grad_axes: Sequence[str] = (),  # per-layer grad-reduction hooks (§4)
     reshard_oracle: bool = False,  # all_gather+slice instead of all_to_all
+    precision=None,  # None -> the plan's policy (core/precision.py, §9)
 ) -> jax.Array:
     """x: local shard (N_loc, D_loc, H_loc, W_loc, Cin) -> (N_loc', out_dim).
 
@@ -122,8 +124,26 @@ def forward(
     FINAL stage's local batch: plans whose CNN->FC transition repartitions
     the spatial group into the batch grid return ``N_loc / spatial_size``
     rows per device, each sample exactly once across the mesh.
+
+    Rematerialization (DESIGN.md §9): a conv block is lowered through
+    ``jax.checkpoint`` when its stage sets ``remat``; a plan with NO
+    per-stage remat falls back to the global ``flags.remat`` knob for
+    every block. Params are marked for gradient reduction OUTSIDE the
+    checkpointed body so the §4 hooks keep firing per layer.
+
+    ``precision`` (or the plan's recorded policy) casts the param compute
+    copies and the input to the policy's compute dtype; the caller's
+    ``params`` stay the fp32 masters.
     """
     plan = _resolve_plan(cfg, plan, part, spatial_shards)
+    policy = precision_lib.get(
+        precision if precision is not None else plan.precision)
+    # compute-copy casting happens at each USE site, after the §4 grad
+    # hook: the hook wraps the fp32 master, the cast sits between hook
+    # and consumer, so cotangents are upcast BEFORE the cross-device
+    # psum — gradient reductions always run fp32, whatever the policy.
+    cst = ((lambda t: t.astype(policy.compute_dtype))
+           if policy.casts_params else (lambda t: t))
     n = num_blocks(cfg)
     npool = num_pools(cfg)
     # DESIGN.md §4: big kernels get their reduction hook at the layer
@@ -133,6 +153,9 @@ def forward(
     marker = grad_comm.GradMarker(grad_axes)
     params = marker.begin(params)
     h = x
+    if policy.casts_params and jnp.issubdtype(h.dtype, jnp.floating):
+        h = h.astype(policy.compute_dtype)
+    plan_remat = plan.uses_remat
     ids = sample_ids
     if ids is None and train and dropout_rng is not None:
         ids = jnp.arange(h.shape[0])
@@ -144,20 +167,30 @@ def forward(
                                    oracle=reshard_oracle)
             cur = st
         stride = 2 if i == 3 else 1  # block 4 (0-indexed 3) is the strided conv
-        h = conv3d(h, marker.mark(params[f"conv{i}_w"]), cur.part,
-                   stride=stride, use_pallas=use_pallas, overlap=overlap)
-        if cfg.batchnorm:
-            # leaky-ReLU folded into the normalize pass (fused Pallas
-            # kernel under use_pallas) — one HBM round-trip, not two.
-            h = dist_norm.distributed_batchnorm(
-                h, marker.mark(params[f"bn{i}_scale"]),
-                marker.mark(params[f"bn{i}_bias"]), bn_axes,
-                use_pallas=use_pallas, activation_slope=0.01,
-            )
-        else:
-            h = jax.nn.leaky_relu(h, negative_slope=0.01)
-        if i < npool:
-            h = maxpool3d(h, cur.part, window=2, stride=2, overlap=overlap)
+        w = cst(marker.mark(params[f"conv{i}_w"]))
+        bn_params = ((cst(marker.mark(params[f"bn{i}_scale"])),
+                      cst(marker.mark(params[f"bn{i}_bias"])))
+                     if cfg.batchnorm else ())
+
+        def block(h, w, *bn, _part=cur.part, _stride=stride,
+                  _pool=i < npool):
+            h = conv3d(h, w, _part, stride=_stride, use_pallas=use_pallas,
+                       overlap=overlap)
+            if bn:
+                # leaky-ReLU folded into the normalize pass (fused Pallas
+                # kernel under use_pallas) — one HBM round-trip, not two.
+                h = dist_norm.distributed_batchnorm(
+                    h, bn[0], bn[1], bn_axes,
+                    use_pallas=use_pallas, activation_slope=0.01)
+            else:
+                h = jax.nn.leaky_relu(h, negative_slope=0.01)
+            if _pool:
+                h = maxpool3d(h, _part, window=2, stride=2, overlap=overlap)
+            return h
+
+        if st.remat if plan_remat else flags.get("remat"):
+            block = jax.checkpoint(block)
+        h = block(h, w, *bn_params)
     # CNN -> FC stage boundary: the plan picks the batch repartition
     # (all_to_all, no redundant compute) or the replicated gather (the
     # legacy fallback — FC then runs redundantly on every spatial shard).
@@ -168,8 +201,8 @@ def forward(
     h = h.reshape(h.shape[0], -1)
     n_fc = len(cfg.fc_dims) + 1
     for j in range(n_fc):
-        h = (h @ marker.mark(params[f"fc{j}_w"])
-             + marker.mark(params[f"fc{j}_b"]))
+        h = (h @ cst(marker.mark(params[f"fc{j}_w"]))
+             + cst(marker.mark(params[f"fc{j}_b"])))
         if j < n_fc - 1:
             h = jax.nn.leaky_relu(h, negative_slope=0.01)
             if train and dropout_rng is not None:
@@ -212,9 +245,14 @@ def mse_loss(
     overlap: Optional[bool] = None,
     grad_axes: Sequence[str] = (),
     reshard_oracle: bool = False,
+    precision=None,
 ) -> jax.Array:
     """LOCAL loss contribution, normalized so that ``psum`` over ALL mesh
     axes yields the global mean loss *and* correct grads.
+
+    Predictions are cast up to fp32 before the squared error whatever
+    ``precision`` the network computed in: the loss, its cotangent seed,
+    and the gradient accumulation all run fp32 (DESIGN.md §9).
 
     The normalizer is the plan's ``loss_redundancy``: how many devices
     compute each sample's FC head. Replicated-gather plans (and the
@@ -234,8 +272,8 @@ def mse_loss(
         spatial_shards=spatial_shards,
         dropout_rng=dropout_rng, sample_ids=sample_ids,
         use_pallas=use_pallas, overlap=overlap, grad_axes=grad_axes,
-        reshard_oracle=reshard_oracle,
+        reshard_oracle=reshard_oracle, precision=precision,
     )
     n_global = global_batch or x.shape[0]
-    per_sample = jnp.mean(jnp.square(pred - y), axis=-1)
+    per_sample = jnp.mean(jnp.square(pred.astype(jnp.float32) - y), axis=-1)
     return jnp.sum(per_sample) / (n_global * redundancy)

@@ -25,8 +25,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ConvNetConfig
-from repro.core import dist_norm, grad_comm, reshard
+from repro.core import dist_norm, flags, grad_comm, reshard
 from repro.core import plan as plan_lib
+from repro.core import precision as precision_lib
 from repro.core.spatial_conv import (
     SpatialPartitioning,
     conv3d,
@@ -80,10 +81,7 @@ def init_params(key: jax.Array, cfg: ConvNetConfig, dtype=jnp.float32) -> Params
     return params
 
 
-def _conv_bn_relu(h, w, s, b, part, bn_axes, use_pallas, overlap=None,
-                  mark=None):
-    if mark:
-        w, s, b = mark(w), mark(s), mark(b)
+def _conv_bn_relu(h, w, s, b, part, bn_axes, use_pallas, overlap=None):
     h = conv3d(h, w, part, stride=1, use_pallas=use_pallas, overlap=overlap)
     # ReLU (slope 0) folded into the normalize pass; fused Pallas kernel
     # under use_pallas (one HBM round-trip instead of two).
@@ -103,20 +101,54 @@ def forward(
     overlap: Optional[bool] = None,  # None -> flags.get("overlap_halo")
     grad_axes: Sequence[str] = (),  # per-layer grad-reduction hooks (§4)
     reshard_oracle: bool = False,  # all_gather+slice instead of all_to_all
+    precision=None,  # None -> the plan's policy (core/precision.py, §9)
 ) -> jax.Array:
     """x: (N_loc, D_loc, H_loc, W_loc, Cin) -> per-voxel logits (..., out_dim).
 
     The output carries the plan's level-0 layout — identical to the input
     layout, whatever the deeper levels transitioned to (every descent
     reshard is undone on the ascent), so spatially-sharded labels line up
-    unchanged."""
+    unchanged.
+
+    Rematerialization (DESIGN.md §9) is per *level*: a stage with
+    ``remat`` checkpoints its encoder conv pair, decoder conv pair, and
+    the bottleneck — only block inputs (and the skip tensors, which are
+    block outputs) stay resident. A plan with no per-stage remat falls
+    back to the global ``flags.remat`` knob. Up-convolutions stay outside
+    the checkpointed bodies (they sit between two stages' reshards).
+    ``precision`` casts the compute copies as in cosmoflow."""
     if plan is None:
         plan = plan_lib.legacy_convnet_plan(
             cfg, part if part is not None else SpatialPartitioning())
+    policy = precision_lib.get(
+        precision if precision is not None else plan.precision)
+    # cast at each use site, AFTER the grad hook (see cosmoflow.forward):
+    # gradient psums stay fp32 under every precision policy.
+    cst = ((lambda t: t.astype(policy.compute_dtype))
+           if policy.casts_params else (lambda t: t))
     marker = grad_comm.GradMarker(grad_axes)
     params = marker.begin(params)
     mark = marker.mark
+    plan_remat = plan.uses_remat
+
+    def conv_pair(names, part):
+        """Checkpointable two-conv body over pre-marked params."""
+        args = tuple(cst(mark(params[k])) for k in names)
+
+        def body(h, w0, s0, b0, w1, s1, b1, _part=part):
+            h = _conv_bn_relu(h, w0, s0, b0, _part, bn_axes, use_pallas,
+                              overlap)
+            return _conv_bn_relu(h, w1, s1, b1, _part, bn_axes, use_pallas,
+                                 overlap)
+
+        return body, args
+
+    def stage_remat(st) -> bool:
+        return st.remat if plan_remat else flags.get("remat")
+
     h = x
+    if policy.casts_params and jnp.issubdtype(h.dtype, jnp.floating):
+        h = h.astype(policy.compute_dtype)
     skips = []
     cur = plan.stage_for(0)
     for lvl in range(cfg.depth):
@@ -124,38 +156,41 @@ def forward(
         if st != cur:
             h, _ = reshard.apply(h, cur, st, oracle=reshard_oracle)
             cur = st
-        h = _conv_bn_relu(h, params[f"enc{lvl}_w0"], params[f"enc{lvl}_s0"],
-                          params[f"enc{lvl}_b0"], cur.part, bn_axes,
-                          use_pallas, overlap, mark)
-        h = _conv_bn_relu(h, params[f"enc{lvl}_w1"], params[f"enc{lvl}_s1"],
-                          params[f"enc{lvl}_b1"], cur.part, bn_axes,
-                          use_pallas, overlap, mark)
+        body, args = conv_pair(
+            [f"enc{lvl}_{k}" for k in ("w0", "s0", "b0", "w1", "s1", "b1")],
+            cur.part)
+        if stage_remat(st):
+            body = jax.checkpoint(body)
+        h = body(h, *args)
         skips.append(h)
         h = maxpool3d(h, cur.part, window=2, stride=2, overlap=overlap)
     st = plan.stage_for(cfg.depth)
     if st != cur:
         h, _ = reshard.apply(h, cur, st, oracle=reshard_oracle)
         cur = st
-    h = _conv_bn_relu(h, params["mid_w0"], params["mid_s0"], params["mid_b0"],
-                      cur.part, bn_axes, use_pallas, overlap, mark)
-    h = _conv_bn_relu(h, params["mid_w1"], params["mid_s1"], params["mid_b1"],
-                      cur.part, bn_axes, use_pallas, overlap, mark)
+    body, args = conv_pair(
+        ["mid_w0", "mid_s0", "mid_b0", "mid_w1", "mid_s1", "mid_b1"],
+        cur.part)
+    if stage_remat(st):
+        body = jax.checkpoint(body)
+    h = body(h, *args)
     for lvl in reversed(range(cfg.depth)):
         # the up-convolution is purely local in any layout; reshard back to
         # the encoder level's stage AFTER it so the skip concat is local
-        h = deconv3d(h, mark(params[f"dec{lvl}_up"]), cur.part, stride=2)
+        h = deconv3d(h, cst(mark(params[f"dec{lvl}_up"])), cur.part,
+                     stride=2)
         st = plan.stage_for(lvl)
         if st != cur:
             h, _ = reshard.apply(h, cur, st, oracle=reshard_oracle)
             cur = st
         h = jnp.concatenate([skips[lvl], h], axis=-1)
-        h = _conv_bn_relu(h, params[f"dec{lvl}_w0"], params[f"dec{lvl}_s0"],
-                          params[f"dec{lvl}_b0"], cur.part, bn_axes,
-                          use_pallas, overlap, mark)
-        h = _conv_bn_relu(h, params[f"dec{lvl}_w1"], params[f"dec{lvl}_s1"],
-                          params[f"dec{lvl}_b1"], cur.part, bn_axes,
-                          use_pallas, overlap, mark)
-    out = conv3d(h, mark(params["head_w"]), cur.part, stride=1,
+        body, args = conv_pair(
+            [f"dec{lvl}_{k}" for k in ("w0", "s0", "b0", "w1", "s1", "b1")],
+            cur.part)
+        if stage_remat(st):
+            body = jax.checkpoint(body)
+        h = body(h, *args)
+    out = conv3d(h, cst(mark(params["head_w"])), cur.part, stride=1,
                  overlap=overlap)
     marker.assert_all_marked()
     return out
@@ -175,17 +210,21 @@ def segmentation_loss(
     overlap: Optional[bool] = None,
     grad_axes: Sequence[str] = (),
     reshard_oracle: bool = False,
+    precision=None,
 ) -> jax.Array:
     """LOCAL per-voxel CE contribution (sum over local voxels / global voxel
     count): ``psum`` over all mesh axes yields the global mean. Labels are
     spatially sharded like the input (the paper's point: ground truth is as
     large as the input and must be spatially distributed too) — and the
     logits come back in the input's layout whatever the plan did at deeper
-    levels, so no label resharding is ever needed."""
+    levels, so no label resharding is ever needed. Logits are cast up to
+    fp32 before the softmax whatever ``precision`` computed them
+    (DESIGN.md §9)."""
     logits = forward(params, x, cfg, part, plan=plan, bn_axes=bn_axes,
                      use_pallas=use_pallas, overlap=overlap,
-                     grad_axes=grad_axes, reshard_oracle=reshard_oracle)
-    logp = jax.nn.log_softmax(logits, axis=-1)
+                     grad_axes=grad_axes, reshard_oracle=reshard_oracle,
+                     precision=precision)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
     nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
     denom = global_voxels or nll.size
     return jnp.sum(nll) / denom

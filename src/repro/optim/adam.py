@@ -31,12 +31,24 @@ class Adam:
                          jax.tree.map(jnp.copy, zeros))
 
     def update(self, grads: Any, state: AdamState, params: Any,
-               *, norm_axes: Tuple[str, ...] = ()) -> Tuple[Any, AdamState]:
+               *, norm_axes: Tuple[str, ...] = (),
+               grad_scale: Optional[jax.Array] = None) -> Tuple[Any, AdamState]:
         """``norm_axes``: mesh axes the grad tree is sharded over (the
         ZeRO-1 reduce-scatter path, DESIGN.md §4) — the clip norm is
         psum-completed across them so sharded and replicated updates
-        clip identically."""
+        clip identically.
+
+        ``grad_scale``: the loss scale the incoming gradients were
+        multiplied by (mixed-precision training, DESIGN.md §9). They are
+        unscaled here, in fp32, BEFORE the clip norm — clipping a scaled
+        tree against an unscaled threshold would clip 2^15x too early.
+        The params are the fp32 master weights; the update maths below
+        always runs fp32 and casts back to each leaf's storage dtype."""
         step = state.step + 1
+        if grad_scale is not None:
+            inv = 1.0 / grad_scale
+            grads = jax.tree.map(
+                lambda g: g.astype(jnp.float32) * inv, grads)
         if self.grad_clip > 0:
             gnorm = global_norm(grads, psum_axes=norm_axes)
             scale = jnp.minimum(1.0, self.grad_clip / (gnorm + 1e-12))
@@ -73,9 +85,14 @@ class SGD:
             None,
         )
 
-    def update(self, grads, state, params, *, norm_axes=()):
+    def update(self, grads, state, params, *, norm_axes=(),
+               grad_scale=None):
         del norm_axes  # SGD has no norm-dependent term
         step = state.step + 1
+        if grad_scale is not None:
+            inv = 1.0 / grad_scale
+            grads = jax.tree.map(
+                lambda g: g.astype(jnp.float32) * inv, grads)
         m = jax.tree.map(
             lambda m, g: self.momentum * m + g.astype(jnp.float32),
             state.m, grads)

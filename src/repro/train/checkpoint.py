@@ -53,19 +53,37 @@ def _leaf_spec(leaf: Any) -> Optional[List[Any]]:
     return None
 
 
-def save(ckpt_dir: str, tree: Any, step: int = 0) -> None:
+def save(ckpt_dir: str, tree: Any, step: int = 0, *,
+         precision: Optional[str] = None) -> None:
+    """``precision`` records the training policy (DESIGN.md §9) in the
+    manifest so a restore knows how the run computes.
+
+    Half-precision float leaves are widened to fp32 on disk regardless
+    (``np.save`` degrades bfloat16 to a raw void dtype), with the
+    ORIGINAL dtype recorded per leaf. ``restore`` narrows them back —
+    an exact round trip — UNLESS the manifest carries a ``precision``
+    policy: then the widened values ARE the canonical fp32 master
+    weights and stay fp32, so a bf16/fp16 training run restores
+    bitwise-identically to its uninterrupted trajectory."""
     os.makedirs(ckpt_dir, exist_ok=True)
     leaves, treedef = jax.tree.flatten(tree)
     paths = jax.tree.leaves(
         jax.tree_util.tree_map_with_path(lambda p, _: jax.tree_util.keystr(p),
                                          tree))
     manifest = {"step": step, "leaves": []}
+    if precision is not None:
+        manifest["precision"] = precision
     for p, leaf in zip(paths, leaves):
         name = _sanitize(p) + ".npy"
         arr = np.asarray(jax.device_get(leaf))
+        orig_dtype = str(arr.dtype)
+        if arr.dtype in (jnp.dtype(jnp.bfloat16), jnp.dtype(jnp.float16)):
+            arr = arr.astype(np.float32)  # exact widening, npy-safe
         np.save(os.path.join(ckpt_dir, name), arr)
-        entry = {"path": p, "file": name, "dtype": str(arr.dtype),
+        entry = {"path": p, "file": name, "dtype": orig_dtype,
                  "shape": list(arr.shape)}
+        if orig_dtype != str(arr.dtype):
+            entry["stored_as"] = str(arr.dtype)
         spec = _leaf_spec(leaf)
         if spec is not None:
             entry["spec"] = spec
@@ -84,10 +102,15 @@ def restore(ckpt_dir: str, like: Any, shardings: Optional[Any] = None,
     with open(os.path.join(ckpt_dir, "manifest.json")) as f:
         manifest = json.load(f)
     by_path = {l["path"]: l for l in manifest["leaves"]}
+    keep_masters = manifest.get("precision") is not None
 
     def load_leaf(path, leaf, sh=None):
         entry = by_path[jax.tree_util.keystr(path)]
         arr = np.load(os.path.join(ckpt_dir, entry["file"]))
+        if "stored_as" in entry and not keep_masters:
+            # widened-for-npy leaf of a policy-less save: narrow back to
+            # the recorded dtype (exact — the widening was exact too)
+            arr = arr.astype(jnp.dtype(entry["dtype"]))
         if sh is None and mesh is not None and "spec" in entry:
             sh = NamedSharding(mesh, _spec_from_json(entry["spec"]))
         if sh is not None:
@@ -102,3 +125,10 @@ def restore(ckpt_dir: str, like: Any, shardings: Optional[Any] = None,
 def latest_step(ckpt_dir: str) -> int:
     with open(os.path.join(ckpt_dir, "manifest.json")) as f:
         return json.load(f)["step"]
+
+
+def saved_precision(ckpt_dir: str) -> Optional[str]:
+    """The precision policy the checkpointed run trained under, or None
+    for checkpoints that never recorded one (pre-§9, or pure fp32)."""
+    with open(os.path.join(ckpt_dir, "manifest.json")) as f:
+        return json.load(f).get("precision")

@@ -26,6 +26,7 @@ from repro.configs.base import ConvNetConfig
 from repro.core import compat, flags
 from repro.core import grad_comm as grad_comm_lib
 from repro.core import plan as plan_lib
+from repro.core import precision as precision_lib
 from repro.core import reshard as reshard_lib
 from repro.core.sharding import ShardingPolicy
 from repro.core.spatial_conv import SpatialPartitioning
@@ -53,7 +54,7 @@ def convnet_grad_plan(cfg: ConvNetConfig) -> "grad_comm_lib.Plan":
     the init-param shapes under the CURRENT bucket policy. Opt-state
     construction and step building must agree on it, so a
     ``grad_comm.bucket_policy(...)`` override has to wrap both (or pass
-    an explicit ``plan=`` to ``make_convnet_opt_state``)."""
+    an explicit ``bucket_plan=`` to ``make_convnet_opt_state``)."""
     return grad_comm_lib.make_plan(_convnet_param_shapes(cfg))
 
 
@@ -65,13 +66,26 @@ def make_convnet_opt_state(
     mesh=None,
     data_axes: Tuple[str, ...] = ("data",),
     grad_comm: Optional[str] = None,
-    plan=None,
+    plan: Optional["plan_lib.ParallelPlan"] = None,
+    bucket_plan=None,
+    precision=None,
 ):
     """Optimizer state matching ``make_convnet_train_step``'s mode:
     replicated full-tree state for monolithic/overlap, ZeRO-1 flat bucket
     state (dim 0 sharded over the data axes by the step's specs) for
-    reduce_scatter (which requires ``mesh``)."""
+    reduce_scatter (which requires ``mesh``).
+
+    ``precision`` must match the step's policy: fp16 wraps the state in
+    the loss-scale machine (``core/precision.py``), fp32/bf16 leave it
+    untouched. Like the step builder, it defaults to ``plan``'s recorded
+    policy — pass the same ``ParallelPlan`` you hand the step and a
+    precision-carrying (budgeted) plan stays self-consistent.
+    ``bucket_plan`` overrides the §4 gradient bucket plan for the ZeRO-1
+    state layout."""
     mode = _resolve_grad_comm(grad_comm)
+    if precision is None and plan is not None:
+        precision = plan.precision
+    optimizer = precision_lib.wrap_optimizer(optimizer, precision)
     if mode != "reduce_scatter":
         return optimizer.init(params)
     if mesh is None:
@@ -81,7 +95,8 @@ def make_convnet_opt_state(
     for a in data_axes:
         n_data *= mesh.shape[a]
     return grad_comm_lib.init_sharded_opt_state(
-        optimizer, plan if plan is not None else convnet_grad_plan(cfg),
+        optimizer,
+        bucket_plan if bucket_plan is not None else convnet_grad_plan(cfg),
         num_shards=n_data)
 
 
@@ -132,6 +147,7 @@ def _build_convnet_step(
     grad_comm: Optional[str],
     stage: str,  # "fwd" | "bwd" | "grad_comm" | "step"
     plan: Optional["plan_lib.ParallelPlan"] = None,
+    precision=None,  # None -> the plan's policy (DESIGN.md §9)
 ):
     """Common builder for the train step and its phase probes.
 
@@ -145,10 +161,22 @@ def _build_convnet_step(
     default is the legacy fixed-degree plan over ``spatial_axes``. A plan
     overrides ``spatial_axes``/``data_axes`` with its first stage's layout
     (inputs are sharded for stage 0; later stages reshard in-graph).
+
+    ``precision`` (default: the plan's recorded policy) drives the §9
+    mixed-precision lowering: params are kept as fp32 masters and cast
+    per step inside the model, a scaling policy multiplies the LOCAL loss
+    by the running loss scale before ``value_and_grad`` (every device
+    applies the same scale, so psums stay correct) and hands the scale to
+    the optimizer to unscale before clipping; non-finite fp16 grads skip
+    the step inside the wrapped optimizer. The fp32 path is bit-identical
+    to the pre-precision lowering.
     """
     mode = _resolve_grad_comm(grad_comm)
     plan = resolve_convnet_plan(cfg, mesh, spatial_axes=spatial_axes,
                                 data_axes=data_axes, plan=plan)
+    policy = precision_lib.get(
+        precision if precision is not None else plan.precision)
+    optimizer = precision_lib.wrap_optimizer(optimizer, policy)
     entry = plan.stages[0]
     spatial_axes = tuple(entry.spatial_axes)
     data_axes = tuple(entry.batch_axes)
@@ -190,7 +218,8 @@ def _build_convnet_step(
                     p, x, y, cfg, plan=plan, bn_axes=all_axes,
                     global_batch=global_batch, sample_ids=sample_ids,
                     train=True, dropout_rng=rng, use_pallas=use_pallas,
-                    overlap=overlap, grad_axes=model_grad_axes)
+                    overlap=overlap, grad_axes=model_grad_axes,
+                    precision=policy)
         else:
             gv = global_batch * cfg.input_width ** 3
 
@@ -198,13 +227,24 @@ def _build_convnet_step(
                 return unet_lib.segmentation_loss(
                     p, x, y, cfg, plan=plan, bn_axes=all_axes,
                     global_voxels=gv, use_pallas=use_pallas,
-                    overlap=overlap, grad_axes=model_grad_axes)
+                    overlap=overlap, grad_axes=model_grad_axes,
+                    precision=policy)
 
         if stage == "fwd":
             return lax.psum(loss_fn(params), all_axes)
 
-        loss, grads = jax.value_and_grad(loss_fn)(params)
-        loss = lax.psum(loss, all_axes)
+        if policy.uses_scaling:
+            # fp16: scale the LOCAL loss so small cotangents survive the
+            # narrow exponent range; identical on every device, so the
+            # hook psums reduce consistently. Unscaled before reporting;
+            # the optimizer unscales the grads before clipping.
+            scale = precision_lib.current_scale(opt_state, policy)
+            loss, grads = jax.value_and_grad(
+                lambda p: loss_fn(p) * scale)(params)
+            loss = lax.psum(loss / scale, all_axes)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            loss = lax.psum(loss, all_axes)
         if stage == "bwd":
             # timing-only probe: collapse the (per-device partial) grads
             # into one psummed scalar — forces the full backward without
@@ -270,6 +310,7 @@ def make_convnet_train_step(
     overlap: Optional[bool] = None,  # halo mode: None -> flags overlap_halo
     grad_comm: Optional[str] = None,  # None -> flags grad_comm
     plan: Optional["plan_lib.ParallelPlan"] = None,  # DESIGN.md §5
+    precision=None,  # None -> the plan's policy (DESIGN.md §9)
     jit: bool = True,
 ):
     """Returns step(params, opt_state, x, y, rng) -> (params, opt, loss).
@@ -280,12 +321,15 @@ def make_convnet_train_step(
     ``make_convnet_opt_state`` (flat ZeRO-1 bucket state); the other
     modes take ``optimizer.init(params)``. ``plan`` selects a per-stage
     parallelism plan and overrides ``spatial_axes``/``data_axes``.
+    ``precision`` selects the mixed-precision policy; ``params`` are
+    always the fp32 masters (``make_convnet_opt_state`` must be built
+    with the same policy so fp16 state carries the loss-scale machine).
     """
     mapped = _build_convnet_step(
         cfg, mesh, optimizer, spatial_axes=spatial_axes,
         data_axes=data_axes, global_batch=global_batch,
         use_pallas=use_pallas, overlap=overlap, grad_comm=grad_comm,
-        stage="step", plan=plan)
+        stage="step", plan=plan, precision=precision)
     if not jit:
         return mapped
     return jax.jit(mapped, donate_argnums=(0, 1))
@@ -303,6 +347,7 @@ def make_convnet_phase_probes(
     overlap: Optional[bool] = None,
     grad_comm: Optional[str] = None,
     plan: Optional["plan_lib.ParallelPlan"] = None,
+    precision=None,
 ) -> Dict[str, Callable]:
     """Jitted probes isolating the train-step phases for attribution:
     ``fwd`` (loss only), ``bwd`` (+backward, no reduction), ``grad_comm``
@@ -315,7 +360,7 @@ def make_convnet_phase_probes(
             cfg, mesh, optimizer, spatial_axes=spatial_axes,
             data_axes=data_axes, global_batch=global_batch,
             use_pallas=use_pallas, overlap=overlap, grad_comm=grad_comm,
-            stage=stage, plan=plan))
+            stage=stage, plan=plan, precision=precision))
         for stage in ("fwd", "bwd", "grad_comm", "step")
     }
 
@@ -330,6 +375,7 @@ def make_convnet_eval_step(
     use_pallas: bool = False,
     overlap: Optional[bool] = None,
     plan: Optional["plan_lib.ParallelPlan"] = None,
+    precision=None,
 ):
     """Returns eval(params, x, y) -> (loss, preds) (cosmoflow only).
 
@@ -348,9 +394,9 @@ def make_convnet_eval_step(
     def local_eval(params, x, y):
         pred = cosmoflow_lib.forward(
             params, x, cfg, plan=plan, bn_axes=all_axes, train=False,
-            use_pallas=use_pallas, overlap=overlap)
+            use_pallas=use_pallas, overlap=overlap, precision=precision)
         y = reshard_lib.shard_batch(y, plan.batch_extension_axes)
-        per = jnp.mean(jnp.square(pred - y), axis=-1)
+        per = jnp.mean(jnp.square(pred.astype(jnp.float32) - y), axis=-1)
         loss = lax.psum(jnp.sum(per) / (global_batch * redundancy),
                         all_axes)
         return loss, pred
