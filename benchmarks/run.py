@@ -22,6 +22,10 @@
                         measured peak bytes, step time x precision x
                         remat on the CPU smoke, and the budgeted
                         planner's capacity argument at paper scale
+  api                   public API (DESIGN.md §10): Session build
+                        (compile) cost and Session-driven step-time
+                        parity vs the raw make_convnet_train_step
+                        assembly (target <=2% overhead)
 
 Output: ``name,us_per_call,derived`` CSV rows (derived = the figure's
 headline quantity). Run: ``PYTHONPATH=src python -m benchmarks.run
@@ -792,14 +796,10 @@ def bench_memory(quick=False):
     import dataclasses
 
     from repro import configs
-    from repro.core import compat as compat_lib
     from repro.core import memory as memory_lib
     from repro.core import plan as plan_lib
     from repro.core.perf_model import V100
     from repro.models import cosmoflow
-    from repro.optim.adam import Adam, constant
-    from repro.train.train_step import (make_convnet_opt_state,
-                                        make_convnet_train_step)
 
     cfg = dataclasses.replace(configs.get_smoke_config("cosmoflow-512"),
                               input_width=16 if quick else 32)
@@ -828,8 +828,11 @@ def bench_memory(quick=False):
              f"measured_MiB={meas / 2 ** 20:.2f};"
              f"model_MiB={model / 2 ** 20:.2f};ratio={model / meas:.3f}")
 
-    # 2. step time x precision x remat (1-device smoke)
-    mesh = compat_lib.make_mesh((1, 1), ("data", "model"))
+    # 2. step time x precision x remat (1-device smoke), Session-driven:
+    # the public API is the assembly path here too (DESIGN.md §10); the
+    # api bench pins its overhead vs the raw path at <=2%.
+    from repro.api import RunConfig, compile as api_compile
+
     base_m = plan_lib.uniform_plan(cfg)  # degree-1 'model'/'data' axes
     remat_m = dataclasses.replace(base_m, stages=tuple(
         dataclasses.replace(s, remat=True) for s in base_m.stages))
@@ -837,15 +840,10 @@ def bench_memory(quick=False):
     t0 = {}
     for prec in ("fp32", "bf16", "fp16"):
         for tag, pl in (("", base_m), ("_remat", remat_m)):
-            opt = Adam(lr=constant(1e-3), grad_clip=1.0)
-            step = jax.jit(make_convnet_train_step(
-                cfg, mesh, opt, global_batch=gb, plan=pl, precision=prec,
-                jit=False))
-            st = make_convnet_opt_state(cfg, opt, p0, mesh=mesh,
-                                        precision=prec)
-            us = _timeit(lambda: step(p0, st, x, y,
-                                      jnp.asarray(0, jnp.int32))[2],
-                         reps=reps)
+            session = api_compile(RunConfig(
+                model=cfg, global_batch=gb, plan=pl, precision=prec,
+                lr=1e-3, lr_schedule="constant", grad_clip=1.0))
+            us = _timeit(lambda: session.step(x, y), reps=reps)
             peak = memory_lib.plan_peak_bytes(
                 cfg, pl, global_batch=gb, precision=prec)
             key = f"{prec}{tag}"
@@ -879,6 +877,93 @@ def bench_memory(quick=False):
          f"fits={peak.total <= budget}")
 
 
+# ---------------------------------------------------------------- api -----
+def bench_api(quick=False):
+    """Public API (DESIGN.md §10): Session build cost and step parity.
+
+    ``repro.api.compile`` lowers to the same jitted program as the raw
+    ``make_convnet_train_step`` path; the only Session-side cost per
+    step is the python wrapper (state rebinding + the seed scalar). The
+    parity rows pin that overhead — target <=2% — with interleaved
+    trimmed-mean timing so machine drift on this oversubscribed box
+    hits both paths equally. The compile row prices the one-time
+    assembly (validation, plan resolution, mesh, param init; jit
+    tracing stays lazy until the first step).
+    """
+    import dataclasses
+
+    from repro import configs
+    from repro.api import RunConfig, compile as api_compile
+    from repro.models import cosmoflow
+    from repro.optim.adam import Adam, constant
+    from repro.train.train_step import (make_convnet_opt_state,
+                                        make_convnet_train_step)
+
+    cfg = dataclasses.replace(configs.get_smoke_config("cosmoflow-512"),
+                              input_width=16 if quick else 32)
+    gb, W = 2, cfg.input_width
+    config = RunConfig(model=cfg, global_batch=gb, lr=1e-3,
+                       lr_schedule="constant", grad_clip=1.0)
+
+    t0 = time.perf_counter()
+    session = api_compile(config)
+    build_us = (time.perf_counter() - t0) * 1e6
+    emit("api.compile", build_us, f"session_build;W={W}")
+
+    x = jax.random.normal(jax.random.PRNGKey(0),
+                          (gb, W, W, W, cfg.in_channels))
+    y = jax.random.normal(jax.random.PRNGKey(1), (gb, cfg.out_dim))
+    t0 = time.perf_counter()
+    jax.block_until_ready(session.step(x, y))
+    emit("api.first_step", (time.perf_counter() - t0) * 1e6,
+         "includes_jit_compile")
+
+    # raw path: identical assembly (same plan, optimizer, precision) AND
+    # identical donation — the raw state is rebound from each call's
+    # outputs exactly like Session.step, so the two programs compile the
+    # same and the comparison isolates the Session's python wrapper
+    opt = Adam(lr=constant(config.lr), grad_clip=config.grad_clip)
+    raw = make_convnet_train_step(cfg, session.mesh, opt, global_batch=gb,
+                                  plan=session.plan)  # jitted, donating
+    p0 = cosmoflow.init_params(jax.random.PRNGKey(config.seed), cfg)
+    st0 = make_convnet_opt_state(cfg, opt, p0, mesh=session.mesh,
+                                 plan=session.plan)
+    raw_state = {"p": p0, "st": st0}
+    seed = jnp.asarray(0, jnp.int32)
+
+    def raw_call():
+        p, st, loss = raw(raw_state["p"], raw_state["st"], x, y, seed)
+        raw_state["p"], raw_state["st"] = p, st
+        jax.block_until_ready(loss)
+
+    calls = {
+        "session": lambda: jax.block_until_ready(session.step(x, y)),
+        "raw": raw_call,
+    }
+    for c in calls.values():
+        c()  # warm/compile
+    rounds = 10 if quick else 30
+    samples = {k: [] for k in calls}
+    for _ in range(rounds):
+        for k, c in calls.items():
+            t0 = time.perf_counter()
+            c()
+            samples[k].append(time.perf_counter() - t0)
+
+    def trimmed(v):
+        v = sorted(v)
+        k = max(len(v) // 5, 1)
+        core = v[k:-k] or v
+        return sum(core) / len(core) * 1e6
+
+    raw_us, sess_us = trimmed(samples["raw"]), trimmed(samples["session"])
+    emit("api.step.raw", raw_us, f"rounds={rounds};W={W}")
+    emit("api.step.session", sess_us,
+         f"overhead={100 * (sess_us - raw_us) / raw_us:+.2f}%_vs_raw;"
+         f"target<=2%")
+    session.close()
+
+
 BENCHES = {
     "fig4_strong_scaling": bench_fig4_strong_scaling,
     "fig7_unet_strong": bench_fig7_unet_strong,
@@ -892,6 +977,7 @@ BENCHES = {
     "grad_comm": bench_grad_comm,
     "plan": bench_plan,
     "memory": bench_memory,
+    "api": bench_api,
 }
 
 

@@ -1,7 +1,7 @@
-"""Quickstart: hybrid-parallel CosmoFlow in ~60 lines.
+"""Quickstart: hybrid-parallel CosmoFlow through the one-call public API.
 
-Builds a reduced CosmoFlow, a (data x model) mesh over the local devices,
-the spatially-parallel data loader, and runs a few training steps.
+One declarative ``RunConfig`` replaces the mesh/plan/step/opt-state
+assembly: ``repro.api.compile`` owns all of it (DESIGN.md §10).
 
     PYTHONPATH=src python examples/quickstart.py
     # multi-"device" demo (8 fake host devices, 2-way data x 4-way spatial):
@@ -9,21 +9,8 @@ the spatially-parallel data loader, and runs a few training steps.
         PYTHONPATH=src python examples/quickstart.py --data 2 --model 4
 """
 import argparse
-import tempfile
 
-import jax
-import jax.numpy as jnp
-
-from repro.core import compat
-import numpy as np
-from jax.sharding import PartitionSpec as P
-
-from repro import configs
-from repro.data import pipeline, store, synthetic
-from repro.models import cosmoflow
-from repro.optim.adam import Adam, linear_decay
-from repro.train.train_step import (make_convnet_opt_state,
-                                    make_convnet_train_step)
+from repro.api import RunConfig, compile
 
 
 def main():
@@ -33,33 +20,16 @@ def main():
     ap.add_argument("--steps", type=int, default=10)
     args = ap.parse_args()
 
-    cfg = configs.get_smoke_config("cosmoflow-512")  # 32^3 reduced variant
-    mesh = compat.make_mesh((args.data, args.model), ("data", "model"))
-    print(f"mesh: {mesh.shape}; model: {cfg.name} "
-          f"({cfg.param_count()/1e3:.0f}k params)")
-
-    with tempfile.TemporaryDirectory() as d:
-        cubes, targets = synthetic.make_cosmology_dataset(
-            16, cfg.input_width, channels=cfg.in_channels, seed=0)
-        store.write_dataset(d, cubes, targets)
-        loader = pipeline.SpatialParallelLoader(
-            store.HyperslabStore(d), mesh,
-            P("data", "model", None, None, None), global_batch=4, seed=0)
-
-        opt = Adam(lr=linear_decay(1e-3, args.steps * 4))
-        step = make_convnet_train_step(
-            cfg, mesh, opt, spatial_axes=("model", None, None),
-            data_axes=("data",), global_batch=4)
-        params = cosmoflow.init_params(jax.random.PRNGKey(0), cfg)
-        opt_state = make_convnet_opt_state(cfg, opt, params,
-                                           mesh=mesh)
-
+    config = RunConfig(model="cosmoflow-512", smoke=True,  # 32^3 variant
+                       data=args.data, spatial=args.model, global_batch=4,
+                       total_steps=args.steps * 4)
+    with compile(config) as session:
+        print(session.describe())
+        loader = session.make_loader(num_samples=16)
         order = loader.epoch_schedule()
         for i in range(args.steps):
             ids = order[(i * 4) % 16:(i * 4) % 16 + 4]
-            x, y = loader.load_batch(ids)
-            params, opt_state, loss = step(params, opt_state, x, y,
-                                           jnp.asarray(i, jnp.int32))
+            loss = session.step(loader.load_batch(ids))
             print(f"step {i:3d}  loss {float(loss):.4f}  "
                   f"pfs_bytes {loader.stats.pfs_bytes}")
     print("done.")

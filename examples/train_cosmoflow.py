@@ -1,7 +1,9 @@
 """End-to-end driver: train a ~100M-param CosmoFlow variant for a few
 hundred steps on synthetic full-resolution cosmology volumes, with the
-full substrate: spatially-parallel I/O + distributed cache, hybrid-parallel
-train step, LR schedule, eval, checkpointing.
+full substrate behind ``repro.api``: spatially-parallel I/O + distributed
+cache, hybrid-parallel train step, LR schedule, eval, checkpointing. The
+canonical hyperparameters live in ``repro.configs.cosmoflow.run_preset``;
+the CLI only overrides them.
 
     PYTHONPATH=src python examples/train_cosmoflow.py --steps 300
     # hybrid-parallel on 8 fake devices:
@@ -10,106 +12,57 @@ train step, LR schedule, eval, checkpointing.
             --data 2 --model 4 --steps 100
 """
 import argparse
-import dataclasses
-import os
-import tempfile
 import time
 
-import jax
-import jax.numpy as jnp
-
 import numpy as np
-from jax.sharding import PartitionSpec as P
 
-from repro import configs
-from repro.configs.base import ConvNetConfig
-from repro.data import pipeline, store, synthetic
-from repro.launch.mesh import make_local_mesh
-from repro.launch.planner_cli import add_planner_args, resolve_plan
-from repro.models import cosmoflow
-from repro.optim.adam import Adam, linear_decay
-from repro.train import checkpoint
-from repro.train.train_step import (make_convnet_eval_step,
-                                    make_convnet_opt_state,
-                                    make_convnet_train_step)
-
-
-def big_config(width: int = 64) -> ConvNetConfig:
-    """~100M-param CosmoFlow variant: wider channels + wider FC head."""
-    return ConvNetConfig(
-        name=f"cosmoflow-big-{width}", family="conv3d", arch="cosmoflow",
-        input_width=width, in_channels=1, out_dim=4,
-        conv_channels=(32, 64, 128, 256, 512), fc_dims=(2048, 256),
-        batchnorm=True)
+from repro.api import compile
+from repro.api.cli import add_session_args, config_from_args
+from repro.configs import cosmoflow as cosmoflow_cfg
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--width", type=int, default=64)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--data", type=int, default=1)
-    ap.add_argument("--model", type=int, default=1)
     ap.add_argument("--num-train", type=int, default=32)
-    ap.add_argument("--ckpt", default=None)
     ap.add_argument("--eval-every", type=int, default=50)
-    add_planner_args(ap)
+    add_session_args(ap)
     args = ap.parse_args()
 
-    cfg = big_config(args.width)
-    print(f"model {cfg.name}: {cfg.param_count()/1e6:.1f}M params")
-    mesh = make_local_mesh(model=args.model, data=args.data)
-    plan, precision = resolve_plan(args, cfg)
-
-    with tempfile.TemporaryDirectory() as d:
-        n = args.num_train
-        cubes, targets = synthetic.make_cosmology_dataset(
-            n + 8, cfg.input_width, channels=1, seed=0)
-        store.write_dataset(d, cubes, targets)
-        loader = pipeline.SpatialParallelLoader(
-            store.HyperslabStore(d), mesh,
-            P("data", "model", None, None, None),
-            global_batch=args.batch, seed=0)
-
-        opt = Adam(lr=linear_decay(1e-3, args.steps), grad_clip=1.0)
-        step = make_convnet_train_step(
-            cfg, mesh, opt, spatial_axes=("model", None, None),
-            data_axes=("data",), global_batch=args.batch, plan=plan,
-            precision=precision)
-        evalf = make_convnet_eval_step(
-            cfg, mesh, spatial_axes=("model", None, None),
-            data_axes=("data",), global_batch=8, precision=precision)
-        params = cosmoflow.init_params(jax.random.PRNGKey(0), cfg)
-        opt_state = make_convnet_opt_state(cfg, opt, params,
-                                           mesh=mesh, precision=precision)
-
+    config = config_from_args(cosmoflow_cfg.run_preset(args.width), args)
+    with compile(config) as session:
+        print(f"model {session.cfg.name}: "
+              f"{session.cfg.param_count() / 1e6:.1f}M params")
+        print(session.describe())
+        n, batch = args.num_train, config.global_batch
+        loader = session.make_loader(num_samples=n + 8)
         xe, ye = loader.load_batch(np.arange(n, n + 8))
+
         t0 = time.time()
         order = loader.epoch_schedule()
         pos = 0
-        for i in range(args.steps):
-            if pos + args.batch > n:
+        for i in range(config.total_steps):
+            if pos + batch > n:
                 order, pos = loader.epoch_schedule(), 0
                 order = order[order < n]
-            ids = order[pos:pos + args.batch]
-            pos += args.batch
-            x, y = loader.load_batch(ids)
-            params, opt_state, loss = step(params, opt_state, x, y,
-                                           jnp.asarray(i, jnp.int32))
+            ids = order[pos:pos + batch]
+            pos += batch
+            loss = session.step(loader.load_batch(ids))
             if i % 10 == 0:
                 dt = time.time() - t0
                 print(f"step {i:4d}  loss {float(loss):.4f}  "
-                      f"{(i+1)*args.batch/dt:.2f} samples/s  "
-                      f"pfs {loader.stats.pfs_bytes/2**20:.0f} MiB  "
-                      f"cache {loader.stats.cache_bytes_local/2**20:.0f} MiB")
+                      f"{(i + 1) * batch / dt:.2f} samples/s  "
+                      f"pfs {loader.stats.pfs_bytes / 2**20:.0f} MiB  "
+                      f"cache {loader.stats.cache_bytes_local / 2**20:.0f} "
+                      f"MiB")
             if args.eval_every and (i + 1) % args.eval_every == 0:
-                ev_loss, _ = evalf(params, xe, ye)
+                ev_loss, _ = session.evaluate(xe, ye)
                 print(f"  eval mse {float(ev_loss):.4f}")
-        if args.ckpt:
-            # fp32 master weights + the precision policy in the manifest
-            checkpoint.save(args.ckpt, params, step=args.steps,
-                            precision=precision)
-            print(f"checkpoint -> {args.ckpt} (precision={precision})")
+        if config.checkpoint_dir:
+            # fp32 masters + plan + precision + config, all in the manifest
+            session.save()
+            print(f"checkpoint -> {config.checkpoint_dir} "
+                  f"(precision={session.precision})")
     print("done.")
 
 

@@ -1,73 +1,43 @@
 """3D U-Net segmentation on synthetic LiTS-like volumes with spatially-
 sharded per-voxel LABELS as well as inputs (paper §II-C: the ground truth
-is as large as the input and must be spatially distributed too).
+is as large as the input and must be spatially distributed too) — driven
+entirely through ``repro.api`` (the loader's label sharding follows the
+Session's plan). Hyperparameters come from
+``repro.configs.unet3d.run_preset``.
 
     PYTHONPATH=src python examples/train_unet3d.py --steps 30
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python examples/train_unet3d.py --data 2 --model 4
 """
 import argparse
-import tempfile
 
-import jax
-import jax.numpy as jnp
-
-from repro.core import compat
 import numpy as np
-from jax.sharding import PartitionSpec as P
 
-from repro import configs
-from repro.data import pipeline, store, synthetic
-from repro.launch.planner_cli import add_planner_args, resolve_plan
-from repro.models import unet3d
-from repro.optim.adam import Adam, linear_decay
-from repro.train.train_step import (make_convnet_opt_state,
-                                    make_convnet_train_step)
+from repro.api import compile
+from repro.api.cli import add_session_args, config_from_args
+from repro.configs import unet3d as unet3d_cfg
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--steps", type=int, default=30)
-    ap.add_argument("--data", type=int, default=1)
-    ap.add_argument("--model", type=int, default=1)
-    ap.add_argument("--batch", type=int, default=2)
-    add_planner_args(ap)
+    add_session_args(ap)
     args = ap.parse_args()
 
-    cfg = configs.get_smoke_config("unet3d-256")
-    mesh = compat.make_mesh((args.data, args.model), ("data", "model"))
-    print(f"{cfg.name}: {cfg.param_count()/1e3:.0f}k params, "
-          f"mesh {dict(mesh.shape)}")
-    plan, precision = resolve_plan(args, cfg)
-
-    with tempfile.TemporaryDirectory() as d:
-        cubes, labels = synthetic.make_segmentation_dataset(
-            8, cfg.input_width, num_classes=cfg.out_dim,
-            channels=cfg.in_channels, seed=0)
-        store.write_dataset(d, cubes, labels=labels)
-        loader = pipeline.SpatialParallelLoader(
-            store.HyperslabStore(d), mesh,
-            P("data", "model", None, None, None), global_batch=args.batch,
-            seed=0, label_spec=P("data", "model", None, None))
-
-        opt = Adam(lr=linear_decay(1e-3, args.steps))
-        step = make_convnet_train_step(
-            cfg, mesh, opt, spatial_axes=("model", None, None),
-            data_axes=("data",), global_batch=args.batch, plan=plan,
-            precision=precision)
-        params = unet3d.init_params(jax.random.PRNGKey(0), cfg)
-        opt_state = make_convnet_opt_state(cfg, opt, params,
-                                           mesh=mesh, precision=precision)
+    config = config_from_args(unet3d_cfg.run_preset(), args)
+    with compile(config) as session:
+        print(f"{session.cfg.name}: "
+              f"{session.cfg.param_count() / 1e3:.0f}k params, "
+              f"mesh {dict(session.mesh.shape)}")
+        print(session.describe())
+        batch = config.global_batch
+        loader = session.make_loader(num_samples=8)
         order = loader.epoch_schedule()
-        for i in range(args.steps):
-            ids = order[(i * args.batch) % 8:(i * args.batch) % 8
-                        + args.batch]
-            x, y = loader.load_batch(ids)
-            params, opt_state, loss = step(params, opt_state, x, y,
-                                           jnp.asarray(i, jnp.int32))
+        for i in range(config.total_steps):
+            ids = order[(i * batch) % 8:(i * batch) % 8 + batch]
+            loss = session.step(loader.load_batch(ids))
             if i % 5 == 0:
                 print(f"step {i:3d}  voxel CE {float(loss):.4f} "
-                      f"(log C = {np.log(cfg.out_dim):.3f})")
+                      f"(log C = {np.log(session.cfg.out_dim):.3f})")
     print("done.")
 
 

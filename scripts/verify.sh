@@ -103,4 +103,44 @@ EOF
 python -m pytest -q tests/test_memory.py -x \
     -k "remat_grad_parity or within_15pct"
 
+echo "== api gate =="
+# DESIGN.md §10: a budgeted Session must (a) report a modeled peak that
+# fits the configured budget and (b) carry exactly the plan the §5
+# planner argmins for the same inputs — i.e. compile() adds policy, not
+# improvisation. Explicit exit, not assert (PYTHONOPTIMIZE-safe).
+python - <<'EOF'
+import dataclasses
+import sys
+
+from repro import configs
+from repro.api import RunConfig, compile as api_compile
+from repro.core import memory, plan as plan_lib
+from repro.core.perf_model import V100
+
+cfg = dataclasses.replace(configs.get_smoke_config("cosmoflow-512"),
+                          input_width=16)
+gb = 2
+dp = memory.data_parallel_peak_bytes(cfg, global_batch=gb, num_gpus=1)
+budget = 1.05 * dp.total  # feasible, but tight enough to exercise the path
+sess = api_compile(RunConfig(model=cfg, global_batch=gb,
+                             memory_budget_gib=budget / 2 ** 30))
+rep = sess.describe()
+if rep.modeled_peak.total > budget:
+    sys.exit(f"api gate: Session peak {rep.modeled_peak.total / 2 ** 20:.2f}"
+             f"MiB over the {budget / 2 ** 20:.2f}MiB budget")
+chosen = plan_lib.plan_convnet(
+    cfg, V100, spatial_degree=1, data_degree=1, global_batch=gb,
+    grad_comm="overlap", memory_budget_bytes=budget,
+    precisions=("fp32", "bf16"), spatial_options=(1,))
+if rep.plan_name != chosen.name:
+    sys.exit(f"api gate: Session plan {rep.plan_name!r} != planner argmin "
+             f"{chosen.name!r}")
+print(f"api gate OK: {rep.plan_name} peak "
+      f"{rep.modeled_peak.total / 2 ** 20:.2f}MiB <= budget "
+      f"{budget / 2 ** 20:.2f}MiB")
+EOF
+
+# the quickstart example end-to-end (the README path: one compile call)
+python examples/quickstart.py --steps 3
+
 echo "verify: OK"

@@ -1,0 +1,21 @@
+"""The public API (DESIGN.md §10): one call from a declarative config to
+a live hybrid-parallel training session.
+
+    from repro.api import RunConfig, compile
+
+    session = compile(RunConfig(model="cosmoflow-512", smoke=True,
+                                data=2, spatial=4, global_batch=4))
+    print(session.describe())
+    loader = session.make_loader()
+    loss = session.step(loader.load_batch(ids))
+
+``RunConfig`` subsumes the mesh/plan/precision/grad-comm/opt-state/
+checkpoint kwarg threading the drivers used to hand-assemble;
+``Session`` lowers to ``repro.train.train_step`` (the internal layer —
+deprecated for direct use in drivers, still the substrate the parity
+tests pin).
+"""
+from repro.api.config import RunConfig, RunConfigError
+from repro.api.session import Report, Session, compile
+
+__all__ = ["RunConfig", "RunConfigError", "Report", "Session", "compile"]

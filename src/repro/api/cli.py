@@ -1,0 +1,63 @@
+"""Shared CLI plumbing for the example drivers: argparse flags that map
+one-to-one onto ``RunConfig`` fields, so every driver exposes the same
+knobs and the only assembly path is ``repro.api.compile``.
+
+(Replaces the pre-§10 ``repro.launch.planner_cli``, which resolved plans
+driver-side and still left each example threading six kwargs.)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.api.config import RunConfig
+
+
+def add_session_args(ap) -> None:
+    """The standard Session knobs. ``--model`` keeps its historical
+    meaning (the spatial degree on the mesh's ``model`` axis)."""
+    ap.add_argument("--steps", type=int, default=None,
+                    help="override the preset's total_steps")
+    ap.add_argument("--batch", type=int, default=None,
+                    help="override the preset's global_batch")
+    ap.add_argument("--data", type=int, default=1,
+                    help="data-parallel degree")
+    ap.add_argument("--model", type=int, default=1,
+                    help="spatial-parallel degree (mesh 'model' axis)")
+    ap.add_argument("--plan", action="store_true",
+                    help="let the cost model pick a per-stage parallelism "
+                         "plan (DESIGN.md §5) instead of the fixed degree")
+    ap.add_argument("--memory-budget", type=float, default=None,
+                    metavar="GIB",
+                    help="per-device budget: the planner argmins time over "
+                         "(boundary x kind x remat x precision) subject to "
+                         "the §9 memory model fitting this")
+    ap.add_argument("--precision", default=None,
+                    choices=("fp32", "bf16", "fp16"),
+                    help="mixed-precision policy (default: fp32, or the "
+                         "budgeted plan's choice)")
+    ap.add_argument("--grad-comm", default=None,
+                    choices=("monolithic", "overlap", "reduce_scatter"),
+                    help="gradient-reduction lowering (DESIGN.md §4)")
+    ap.add_argument("--ckpt", default=None,
+                    help="checkpoint directory (final save; restore with "
+                         "Session.restore)")
+
+
+def config_from_args(base: RunConfig, args) -> RunConfig:
+    """Apply parsed ``add_session_args`` flags over a preset config."""
+    over = {"data": args.data, "spatial": args.model}
+    if args.steps is not None:
+        over["total_steps"] = args.steps
+    if args.batch is not None:
+        over["global_batch"] = args.batch
+    if args.plan or args.memory_budget is not None:
+        over["plan"] = "auto"
+    if args.memory_budget is not None:
+        over["memory_budget_gib"] = args.memory_budget
+    if args.precision:
+        over["precision"] = args.precision
+    if args.grad_comm:
+        over["grad_comm"] = args.grad_comm
+    if args.ckpt:
+        over["checkpoint_dir"] = args.ckpt
+    return dataclasses.replace(base, **over)

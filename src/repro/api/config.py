@@ -1,0 +1,265 @@
+"""Declarative run configuration for the public API (DESIGN.md §10).
+
+A ``RunConfig`` says *what* to train — model, global batch, mesh shape,
+memory budget, precision/grad-comm/plan policies, optimizer schedule,
+checkpoint policy, data source — and ``repro.api.compile`` turns it into
+a live ``Session`` (mesh + plan + precision + sharded opt state + jitted
+step). Every field the four subsystems used to thread through
+``make_convnet_train_step`` kwargs lives here once, validated up front:
+a bad value raises ``RunConfigError`` naming the offending field and a
+concrete fix instead of surfacing as a shape error three layers down.
+
+``RunConfig`` round-trips through JSON (``to_json``/``from_json``),
+including an inline ``ConvNetConfig`` model and a resolved
+``ParallelPlan`` override — which is how ``Session.save`` embeds the
+full run description in a checkpoint and ``Session.restore`` rebuilds
+the run from the manifest alone.
+"""
+from __future__ import annotations
+
+import dataclasses
+import difflib
+from typing import Any, Dict, Optional, Tuple, Union
+
+from repro.configs.base import ConvNetConfig
+from repro.core import plan as plan_lib
+
+PRECISIONS = ("auto", "fp32", "bf16", "fp16")
+GRAD_COMMS = ("auto", "monolithic", "overlap", "reduce_scatter")
+PLAN_POLICIES = ("fixed", "auto")
+LR_SCHEDULES = ("constant", "linear_decay", "warmup_cosine")
+_MIN_LOCAL_WIDTH = 4  # the over-decomposition rule (DESIGN.md §5)
+
+
+class RunConfigError(ValueError):
+    """A misconfigured ``RunConfig`` field: names the field, what is
+    wrong with it, and a suggested fix."""
+
+    def __init__(self, field: str, problem: str, fix: str):
+        self.field = field
+        self.problem = problem
+        self.fix = fix
+        super().__init__(f"RunConfig.{field}: {problem} — fix: {fix}")
+
+
+@dataclasses.dataclass(frozen=True)
+class RunConfig:
+    """One declarative description of a hybrid-parallel training run.
+
+    ``model`` is a registry name (``repro.configs``, e.g.
+    ``"cosmoflow-512"``; ``smoke=True`` picks its reduced smoke variant)
+    or an inline ``ConvNetConfig``. ``data`` x ``spatial`` is the mesh:
+    ``data``-way batch parallelism times ``spatial``-way spatial
+    partitioning (the mesh's ``model`` axis). ``plan`` selects the
+    per-stage parallelism plan: ``"fixed"`` (the legacy fixed-degree
+    layout), ``"auto"`` (the DESIGN.md §5 cost-model planner — implied
+    by ``memory_budget_gib``), or an explicit ``ParallelPlan``.
+    ``precision="auto"`` resolves to the plan's policy (fp32 unless a
+    memory budget pushed the planner lower); ``grad_comm="auto"`` to the
+    process default (``core/flags.py``, normally ``"overlap"``)."""
+
+    model: Union[str, ConvNetConfig]
+    smoke: bool = False
+    global_batch: int = 4
+    data: int = 1
+    spatial: int = 1
+    plan: Union[str, "plan_lib.ParallelPlan"] = "fixed"
+    memory_budget_gib: Optional[float] = None
+    precision: str = "auto"
+    grad_comm: str = "auto"
+    overlap_halo: Optional[bool] = None  # None -> flags.overlap_halo
+    use_pallas: bool = False
+    # --- optimizer ---
+    lr: float = 1e-3
+    lr_schedule: str = "linear_decay"
+    warmup_steps: int = 0  # warmup_cosine only
+    grad_clip: float = 0.0
+    total_steps: int = 100
+    seed: int = 0
+    # --- checkpoint policy ---
+    checkpoint_dir: Optional[str] = None
+    save_every: Optional[int] = None  # steps between auto-saves
+    # --- data source: a HyperslabStore root, or None for synthetic ---
+    data_dir: Optional[str] = None
+
+    # ------------------------------------------------------ resolution ----
+    def resolve_model(self) -> ConvNetConfig:
+        """The concrete ``ConvNetConfig`` this run trains (validated)."""
+        if isinstance(self.model, ConvNetConfig):
+            return self.model
+        from repro import configs  # deferred: configs presets import us
+
+        if self.model not in configs.ALL_ARCHS:
+            close = difflib.get_close_matches(str(self.model),
+                                              configs.ALL_ARCHS, n=3)
+            hint = (f"did you mean {', '.join(close)}?" if close
+                    else f"choices: {', '.join(configs.ALL_ARCHS)}")
+            raise RunConfigError("model", f"unknown model {self.model!r}",
+                                 hint)
+        cfg = (configs.get_smoke_config(self.model) if self.smoke
+               else configs.get_config(self.model))
+        if not isinstance(cfg, ConvNetConfig):
+            raise RunConfigError(
+                "model",
+                f"{self.model!r} is a {type(cfg).__name__} "
+                f"({cfg.family}), not a conv3d model",
+                "the Session drives the paper's 3D-CNN family; use "
+                "repro.launch.train's GSPMD path for sequence models")
+        return cfg
+
+    # ------------------------------------------------------ validation ----
+    def validate(self, device_count: Optional[int] = None) -> None:
+        """Check every field up front; raise ``RunConfigError`` naming
+        the field and a fix. ``device_count=None`` reads the live jax
+        device count (tests can pin one instead)."""
+        cfg = self.resolve_model()
+
+        for field in ("data", "spatial"):
+            v = getattr(self, field)
+            if not isinstance(v, int) or v < 1:
+                raise RunConfigError(field, f"degree must be an int >= 1, "
+                                     f"got {v!r}", "pass a positive degree")
+        if not isinstance(self.global_batch, int) or self.global_batch < 1:
+            raise RunConfigError("global_batch",
+                                 f"must be an int >= 1, got "
+                                 f"{self.global_batch!r}",
+                                 "pass a positive batch size")
+        if self.global_batch % self.data:
+            up = ((self.global_batch // self.data) + 1) * self.data
+            raise RunConfigError(
+                "global_batch",
+                f"{self.global_batch} does not divide over data={self.data}",
+                f"use a multiple of {self.data} (e.g. {up}), or lower data")
+        if self.spatial > 1:
+            w = cfg.input_width
+            if w % self.spatial:
+                raise RunConfigError(
+                    "spatial",
+                    f"{self.spatial} does not divide {cfg.name}'s input "
+                    f"width {w}",
+                    f"use a power-of-two divisor of {w}")
+            if w // self.spatial < _MIN_LOCAL_WIDTH:
+                raise RunConfigError(
+                    "spatial",
+                    f"{self.spatial}-way decomposition of width {w} gives "
+                    f"local width {w // self.spatial} < {_MIN_LOCAL_WIDTH}",
+                    f"reduce spatial to <= {w // _MIN_LOCAL_WIDTH}")
+
+        if self.precision not in PRECISIONS:
+            raise RunConfigError("precision",
+                                 f"unknown policy {self.precision!r}",
+                                 f"choices: {', '.join(PRECISIONS)}")
+        if self.grad_comm not in GRAD_COMMS:
+            raise RunConfigError("grad_comm",
+                                 f"unknown mode {self.grad_comm!r}",
+                                 f"choices: {', '.join(GRAD_COMMS)}")
+
+        if isinstance(self.plan, plan_lib.ParallelPlan):
+            self._validate_plan_degrees(self.plan)
+        elif self.plan not in PLAN_POLICIES:
+            raise RunConfigError(
+                "plan", f"unknown policy {self.plan!r}",
+                f"pass one of {PLAN_POLICIES} or a ParallelPlan instance")
+
+        if self.memory_budget_gib is not None and self.memory_budget_gib <= 0:
+            raise RunConfigError("memory_budget_gib",
+                                 f"must be > 0, got {self.memory_budget_gib}",
+                                 "pass the per-device budget in GiB")
+
+        if self.lr_schedule not in LR_SCHEDULES:
+            raise RunConfigError("lr_schedule",
+                                 f"unknown schedule {self.lr_schedule!r}",
+                                 f"choices: {', '.join(LR_SCHEDULES)}")
+        if self.total_steps < 1:
+            raise RunConfigError("total_steps",
+                                 f"must be >= 1, got {self.total_steps}",
+                                 "pass the run length in steps")
+        if (self.lr_schedule == "warmup_cosine"
+                and not 0 <= self.warmup_steps < self.total_steps):
+            raise RunConfigError(
+                "warmup_steps",
+                f"{self.warmup_steps} outside [0, total_steps="
+                f"{self.total_steps})", "shorten the warmup")
+
+        if self.save_every is not None and self.checkpoint_dir is None:
+            raise RunConfigError(
+                "save_every",
+                "periodic saving requested without a checkpoint_dir",
+                "set checkpoint_dir=, or drop save_every")
+
+        if device_count is None:
+            import jax
+            device_count = jax.device_count()
+        if self.data * self.spatial > device_count:
+            raise RunConfigError(
+                "data",
+                f"data x spatial = {self.data}x{self.spatial} = "
+                f"{self.data * self.spatial} devices, but only "
+                f"{device_count} visible",
+                "reduce the degrees, or force host devices with XLA_FLAGS="
+                f"--xla_force_host_platform_device_count="
+                f"{self.data * self.spatial}")
+
+    def _validate_plan_degrees(self, plan: "plan_lib.ParallelPlan") -> None:
+        data_deg, spatial_deg = plan.data_degree, plan.spatial_degree
+        if data_deg != self.data or spatial_deg != self.spatial:
+            raise RunConfigError(
+                "plan",
+                f"plan {plan.name!r} records {data_deg}-way data x "
+                f"{spatial_deg}-way spatial, but the config asks for "
+                f"{self.data}x{self.spatial}",
+                f"set data={data_deg}, spatial={spatial_deg} (or rebuild "
+                f"the plan for this mesh)")
+
+    # --------------------------------------------------- serialization ----
+    def to_json(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        if isinstance(self.model, ConvNetConfig):
+            d["model"] = {"conv_config": dataclasses.asdict(self.model)}
+        if isinstance(self.plan, plan_lib.ParallelPlan):
+            d["plan"] = plan_to_json(self.plan)
+        return d
+
+    @classmethod
+    def from_json(cls, d: Dict[str, Any]) -> "RunConfig":
+        d = dict(d)
+        if isinstance(d.get("model"), dict):
+            d["model"] = conv_config_from_json(d["model"]["conv_config"])
+        if isinstance(d.get("plan"), dict):
+            d["plan"] = plan_from_json(d["plan"])
+        return cls(**d)
+
+
+# ---------------------------------------------- plan/model (de)serialize ----
+def plan_to_json(plan: "plan_lib.ParallelPlan") -> Dict[str, Any]:
+    return {
+        "stages": [
+            {"start": s.start, "stop": s.stop,
+             "spatial_axes": list(s.spatial_axes),
+             "batch_axes": list(s.batch_axes), "remat": s.remat}
+            for s in plan.stages],
+        "mesh_axes": [[a, n] for a, n in plan.mesh_axes],
+        "n_layers": plan.n_layers,
+        "name": plan.name,
+        "cost": plan.cost,
+        "precision": plan.precision,
+    }
+
+
+def plan_from_json(d: Dict[str, Any]) -> "plan_lib.ParallelPlan":
+    stages = tuple(
+        plan_lib.Stage(s["start"], s["stop"], tuple(s["spatial_axes"]),
+                       tuple(s["batch_axes"]), s["remat"])
+        for s in d["stages"])
+    return plan_lib.ParallelPlan(
+        stages, tuple((a, int(n)) for a, n in d["mesh_axes"]),
+        d["n_layers"], name=d["name"], cost=d["cost"],
+        precision=d["precision"])
+
+
+def conv_config_from_json(d: Dict[str, Any]) -> ConvNetConfig:
+    d = dict(d)
+    for k in ("conv_channels", "fc_dims"):
+        if k in d:
+            d[k] = tuple(d[k])
+    return ConvNetConfig(**d)

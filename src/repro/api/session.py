@@ -1,0 +1,421 @@
+"""``compile(RunConfig) -> Session``: the one assembly path (DESIGN.md §10).
+
+The Session owns everything the drivers used to hand-assemble — the mesh,
+the (possibly memory-budget-argmin'd) ``ParallelPlan``, the precision
+policy, the sharded optimizer state, and the jitted step/eval closures —
+behind one lifecycle:
+
+    session = repro.api.compile(config)   # validate -> plan -> mesh -> jit
+    print(session.describe())             # plan + modeled peak + model time
+    loader = session.make_loader()        # plan-sharded data pipeline
+    loss = session.step(batch)            # params/opt/seed threaded inside
+    session.save(path); Session.restore(path)  # config embedded in ckpt
+
+It *lowers to* ``repro.train.train_step`` — the internal layer the
+existing parity/jaxpr tests pin — so a Session-driven step is the same
+compiled program as the raw ``make_convnet_train_step`` path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.api.config import RunConfig, RunConfigError
+from repro.configs.base import ConvNetConfig
+from repro.core import flags
+from repro.core import memory as memory_lib
+from repro.core import plan as plan_lib
+from repro.core import precision as precision_lib
+from repro.core.perf_model import V100
+from repro.core.spatial_conv import SpatialPartitioning
+from repro.launch import mesh as mesh_lib
+from repro.models import cosmoflow as cosmoflow_lib
+from repro.models import unet3d as unet_lib
+from repro.optim.adam import Adam, constant, linear_decay, warmup_cosine
+from repro.train import checkpoint
+from repro.train import train_step as train_step_lib
+
+_META_FILE = "run_config.json"
+
+
+@dataclasses.dataclass(frozen=True)
+class Report:
+    """``Session.describe()``: the chosen plan, the §9 modeled peak, and
+    the §8 perf-model step time, as one record."""
+
+    plan_name: str
+    stages: Tuple[Tuple[int, int, Tuple[Optional[str], ...],
+                        Tuple[str, ...], bool], ...]
+    mesh_shape: Dict[str, int]
+    precision: str
+    grad_comm: str
+    global_batch: int
+    param_count: int
+    modeled_peak: "memory_lib.MemoryBreakdown"
+    memory_budget_bytes: Optional[float]
+    predicted_step_s: float
+
+    def __str__(self) -> str:
+        budget = ("none" if self.memory_budget_bytes is None
+                  else f"{self.memory_budget_bytes / 2 ** 30:.2f}GiB")
+        stages = "; ".join(
+            f"[{a},{b}) spatial={[x for x in sp if x]} batch={list(ba)}"
+            + (" remat" if rm else "")
+            for a, b, sp, ba, rm in self.stages)
+        return (
+            f"Session[{self.plan_name}]\n"
+            f"  mesh {self.mesh_shape}  precision={self.precision}  "
+            f"grad_comm={self.grad_comm}  global_batch={self.global_batch}\n"
+            f"  stages: {stages}\n"
+            f"  params {self.param_count / 1e6:.2f}M  "
+            f"modeled peak/device {self.modeled_peak.describe()}\n"
+            f"  budget {budget}  predicted step "
+            f"{self.predicted_step_s * 1e3:.2f}ms (perf model, V100)")
+
+
+def _build_optimizer(config: RunConfig) -> Adam:
+    if config.lr_schedule == "constant":
+        sched = constant(config.lr)
+    elif config.lr_schedule == "linear_decay":
+        sched = linear_decay(config.lr, config.total_steps)
+    else:
+        sched = warmup_cosine(config.lr, config.warmup_steps,
+                              config.total_steps)
+    return Adam(lr=sched, grad_clip=config.grad_clip)
+
+
+def _spatial_options(cfg: ConvNetConfig, config: RunConfig) -> Tuple[int, ...]:
+    """Spatial degrees the budgeted planner may raise to: powers of two
+    from the configured degree while the device count and the layer-0
+    local width admit them (DESIGN.md §9's capacity escape hatch)."""
+    opts, s = [], max(config.spatial, 1)
+    dev = jax.device_count()
+    while (config.data * s <= dev and cfg.input_width % s == 0
+           and cfg.input_width // s >= 4):
+        opts.append(s)
+        s *= 2
+    return tuple(opts) or (config.spatial,)
+
+
+def _resolve_plan(config: RunConfig, cfg: ConvNetConfig,
+                  grad_comm: str) -> Tuple["plan_lib.ParallelPlan", str]:
+    """(plan, precision name) for a validated config."""
+    explicit = None if config.precision == "auto" else config.precision
+    if isinstance(config.plan, plan_lib.ParallelPlan):
+        return config.plan, explicit or config.plan.precision
+    if config.plan == "auto" or config.memory_budget_gib is not None:
+        kw: Dict[str, Any] = dict(
+            spatial_degree=config.spatial, data_degree=config.data,
+            global_batch=config.global_batch, grad_comm=grad_comm)
+        if config.memory_budget_gib is not None:
+            budget = config.memory_budget_gib * 2 ** 30
+            precisions = (explicit,) if explicit else ("fp32", "bf16")
+            options = _spatial_options(cfg, config)
+            kw.update(memory_budget_bytes=budget, precisions=precisions,
+                      spatial_options=options)
+            try:
+                plan = plan_lib.plan_convnet(cfg, V100, **kw)
+            except ValueError as e:
+                # the planner attaches the min modeled peak over every
+                # candidate it priced — the floor the error reports
+                mem = getattr(e, "best_infeasible_mem", None)
+                if mem is None:
+                    raise RunConfigError(
+                        "spatial", str(e),
+                        "no admissible plan at these degrees; lower "
+                        "spatial or raise the device count") from e
+                raise RunConfigError(
+                    "memory_budget_gib",
+                    f"{config.memory_budget_gib:.3f} GiB is below every "
+                    f"feasible plan",
+                    f"raise to at least {mem.total / 2 ** 30:.3f} GiB "
+                    f"(the {e.best_infeasible_plan.name} floor over "
+                    f"spatial options {list(options)}), add devices, or "
+                    f"allow lower precision") from e
+            return plan, explicit or plan.precision
+        if explicit:
+            kw["precisions"] = (explicit,)
+        plan = plan_lib.plan_convnet(cfg, V100, **kw)
+        return plan, explicit or plan.precision
+    # "fixed": the legacy fixed-degree layout (over-decomposition gathers
+    # + replicated FC head), exactly what the kwarg path defaulted to
+    plan = plan_lib.legacy_convnet_plan(
+        cfg, SpatialPartitioning(("model", None, None)),
+        (config.spatial, 1, 1), data_degrees=(config.data,))
+    return plan, explicit or "fp32"
+
+
+def compile(config: RunConfig) -> "Session":  # noqa: A001 - the API verb
+    """Validate ``config``, resolve plan/precision/grad-comm, build the
+    mesh and optimizer state, and return a live ``Session``."""
+    return _compile(config, abstract_state=False)
+
+
+def _compile(config: RunConfig, *, abstract_state: bool) -> "Session":
+    """``abstract_state=True`` builds params/opt-state as ``eval_shape``
+    templates instead of materialized arrays — ``Session.restore`` only
+    needs their tree structure before overwriting them from disk."""
+    config.validate()
+    cfg = config.resolve_model()
+    grad_comm = (config.grad_comm if config.grad_comm != "auto"
+                 else flags.get("grad_comm"))
+    plan, precision = _resolve_plan(config, cfg, grad_comm)
+    mesh = mesh_lib.make_plan_mesh(plan)
+    optimizer = _build_optimizer(config)
+    init_fn = (cosmoflow_lib.init_params if cfg.arch == "cosmoflow"
+               else unet_lib.init_params)
+
+    def build_state():
+        params = init_fn(jax.random.PRNGKey(config.seed), cfg)
+        opt_state = train_step_lib.make_convnet_opt_state(
+            cfg, optimizer, params, mesh=mesh, grad_comm=grad_comm,
+            plan=plan, precision=precision)
+        return params, opt_state
+
+    params, opt_state = (jax.eval_shape(build_state) if abstract_state
+                         else build_state())
+    step_fn = train_step_lib.make_convnet_train_step(
+        cfg, mesh, optimizer, global_batch=config.global_batch,
+        use_pallas=config.use_pallas, overlap=config.overlap_halo,
+        grad_comm=grad_comm, plan=plan, precision=precision)
+    return Session(config, cfg, mesh, plan, precision, grad_comm,
+                   optimizer, params, opt_state, step_fn)
+
+
+class Session:
+    """A compiled hybrid-parallel training run. Build with
+    ``repro.api.compile`` (or ``Session.restore``), not directly."""
+
+    def __init__(self, config, cfg, mesh, plan, precision, grad_comm,
+                 optimizer, params, opt_state, step_fn):
+        self.config: RunConfig = config
+        self.cfg: ConvNetConfig = cfg
+        self.mesh = mesh
+        self.plan: plan_lib.ParallelPlan = plan
+        self.precision: str = precision_lib.get(precision).name
+        self.grad_comm: str = grad_comm
+        self.optimizer = optimizer
+        self.params = params
+        self.opt_state = opt_state
+        self._step_fn = step_fn
+        self._t = 0
+        self._eval_fns: Dict[Any, Any] = {}
+        self._tmpdirs = []
+
+    # ----------------------------------------------------------- train ----
+    @property
+    def step_count(self) -> int:
+        return self._t
+
+    def step(self, batch, y=None):
+        """Run one training step on a global batch (an ``(x, y)`` pair,
+        or ``step(x, y)``) and return the loss. Params, optimizer state,
+        and the per-step dropout seed are threaded internally; the
+        checkpoint policy (``save_every``) fires here."""
+        x, y = batch if y is None else (batch, y)
+        self.params, self.opt_state, loss = self._step_fn(
+            self.params, self.opt_state, x, y,
+            jnp.asarray(self._t, jnp.int32))
+        self._t += 1
+        if (self.config.checkpoint_dir and self.config.save_every
+                and self._t % self.config.save_every == 0):
+            self.save()
+        return loss
+
+    def evaluate(self, x, y):
+        """(loss, predictions) on an eval batch. CosmoFlow returns the
+        regression MSE and per-sample predictions (sharded over the FC
+        stage's batch axes); the U-Net returns the voxel cross-entropy
+        and ``None``."""
+        gb = int(x.shape[0])
+        key = ("eval", gb)
+        fn = self._eval_fns.get(key)
+        if self.cfg.arch == "cosmoflow":
+            if fn is None:
+                fn = train_step_lib.make_convnet_eval_step(
+                    self.cfg, self.mesh, global_batch=gb, plan=self.plan,
+                    use_pallas=self.config.use_pallas,
+                    overlap=self.config.overlap_halo,
+                    precision=self.precision)
+                self._eval_fns[key] = fn
+            return fn(self.params, x, y)
+        if fn is None:
+            fn = jax.jit(train_step_lib._build_convnet_step(
+                self.cfg, self.mesh, self.optimizer,
+                spatial_axes=("model", None, None), data_axes=("data",),
+                global_batch=gb, use_pallas=self.config.use_pallas,
+                overlap=self.config.overlap_halo, grad_comm=self.grad_comm,
+                stage="fwd", plan=self.plan, precision=self.precision))
+            self._eval_fns[key] = fn
+        loss = fn(self.params, self.opt_state, x, y,
+                  jnp.asarray(0, jnp.int32))
+        return loss, None
+
+    # --------------------------------------------------- introspection ----
+    def describe(self) -> Report:
+        """One report: the chosen plan, the modeled per-device peak
+        (``core/memory.py``), and the predicted step time
+        (``core/perf_model.py``)."""
+        priced = (self.plan if self.plan.precision == self.precision
+                  else dataclasses.replace(self.plan,
+                                           precision=self.precision))
+        t = plan_lib.price_plan(self.cfg, V100, priced,
+                                global_batch=self.config.global_batch,
+                                grad_comm=self.grad_comm)
+        peak = memory_lib.plan_peak_bytes(
+            self.cfg, self.plan, global_batch=self.config.global_batch,
+            grad_comm=self.grad_comm, precision=self.precision)
+        budget = (None if self.config.memory_budget_gib is None
+                  else self.config.memory_budget_gib * 2 ** 30)
+        return Report(
+            plan_name=self.plan.name,
+            stages=tuple((s.start, s.stop, tuple(s.spatial_axes),
+                          tuple(s.batch_axes), s.remat)
+                         for s in self.plan.stages),
+            mesh_shape=dict(self.mesh.shape),
+            precision=self.precision,
+            grad_comm=self.grad_comm,
+            global_batch=self.config.global_batch,
+            param_count=self.cfg.param_count(),
+            modeled_peak=peak,
+            memory_budget_bytes=budget,
+            predicted_step_s=t)
+
+    def profile(self, batch=None, reps: int = 3) -> Dict[str, float]:
+        """Measured phase attribution (DESIGN.md §4): seconds for the
+        ``fwd``/``bwd``/``grad_comm``/``step`` probes plus the derived
+        per-phase splits (``backward``, ``comm``, ``optimizer``).
+        ``batch=None`` profiles a synthetic batch."""
+        x, y = batch if batch is not None else self._synthetic_batch()
+        probes = train_step_lib.make_convnet_phase_probes(
+            self.cfg, self.mesh, self.optimizer,
+            global_batch=self.config.global_batch,
+            use_pallas=self.config.use_pallas,
+            overlap=self.config.overlap_halo, grad_comm=self.grad_comm,
+            plan=self.plan, precision=self.precision)
+        seed = jnp.asarray(0, jnp.int32)
+        out: Dict[str, float] = {}
+        for stage, fn in probes.items():
+            jax.block_until_ready(fn(self.params, self.opt_state, x, y,
+                                     seed))  # compile
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                r = fn(self.params, self.opt_state, x, y, seed)
+            jax.block_until_ready(r)
+            out[stage] = (time.perf_counter() - t0) / reps
+        out["backward"] = max(out["bwd"] - out["fwd"], 0.0)
+        out["comm"] = max(out["grad_comm"] - out["bwd"], 0.0)
+        out["optimizer"] = max(out["step"] - out["grad_comm"], 0.0)
+        return out
+
+    def _synthetic_batch(self):
+        w, gb = self.cfg.input_width, self.config.global_batch
+        kx, ky = jax.random.split(jax.random.PRNGKey(self.config.seed + 1))
+        x = jax.random.normal(kx, (gb, w, w, w, self.cfg.in_channels))
+        if self.cfg.arch == "cosmoflow":
+            y = jax.random.normal(ky, (gb, self.cfg.out_dim))
+        else:
+            y = jax.random.randint(ky, (gb, w, w, w), 0, self.cfg.out_dim)
+        return x, y
+
+    # ------------------------------------------------------------ data ----
+    def make_loader(self, root: Optional[str] = None, *,
+                    num_samples: int = 16, seed: int = 0, cache: bool = True):
+        """A ``SpatialParallelLoader`` sharded for the plan's entry
+        stage. ``root`` (or ``config.data_dir``) names an existing
+        ``HyperslabStore``; with neither, a synthetic dataset of
+        ``num_samples`` volumes is written to a Session-owned temp dir."""
+        from repro.data import pipeline, store, synthetic
+
+        root = root or self.config.data_dir
+        if root is None:
+            tmp = tempfile.TemporaryDirectory()
+            self._tmpdirs.append(tmp)
+            root = tmp.name
+            if self.cfg.arch == "cosmoflow":
+                cubes, targets = synthetic.make_cosmology_dataset(
+                    num_samples, self.cfg.input_width,
+                    channels=self.cfg.in_channels, seed=seed)
+                store.write_dataset(root, cubes, targets)
+            else:
+                cubes, labels = synthetic.make_segmentation_dataset(
+                    num_samples, self.cfg.input_width,
+                    num_classes=self.cfg.out_dim,
+                    channels=self.cfg.in_channels, seed=seed)
+                store.write_dataset(root, cubes, labels=labels)
+        entry = self.plan.stages[0]
+        dspec = (tuple(entry.batch_axes) if len(entry.batch_axes) > 1
+                 else entry.batch_axes[0])
+        x_spec = P(dspec, *entry.spatial_axes, None)
+        label_spec = (P(dspec, *entry.spatial_axes)
+                      if self.cfg.arch == "unet3d" else None)
+        return pipeline.SpatialParallelLoader(
+            store.HyperslabStore(root), self.mesh, x_spec,
+            global_batch=self.config.global_batch, seed=seed, cache=cache,
+            label_spec=label_spec)
+
+    # ------------------------------------------------------ checkpoint ----
+    def save(self, path: Optional[str] = None) -> str:
+        """Checkpoint params + optimizer state (fp32 masters, per-leaf
+        PartitionSpecs) AND the resolved run description, so
+        ``Session.restore(path)`` rebuilds the whole run from the
+        checkpoint alone."""
+        path = path or self.config.checkpoint_dir
+        if path is None:
+            raise ValueError("no path: pass save(path) or set "
+                             "RunConfig.checkpoint_dir")
+        checkpoint.save(path, {"params": self.params, "opt": self.opt_state},
+                        step=self._t, precision=self.precision)
+        meta = {"run_config": self._pinned_config().to_json()}
+        with open(os.path.join(path, _META_FILE), "w") as f:
+            json.dump(meta, f, indent=1)
+        return path
+
+    def _pinned_config(self) -> RunConfig:
+        """The config with every ``"auto"`` resolved: the concrete model,
+        the chosen plan, precision, grad-comm, and the plan's actual
+        degrees (a budgeted planner may have raised ``spatial``)."""
+        return dataclasses.replace(
+            self.config, model=self.cfg, plan=self.plan,
+            precision=self.precision, grad_comm=self.grad_comm,
+            data=self.plan.data_degree, spatial=self.plan.spatial_degree)
+
+    @classmethod
+    def restore(cls, path: str) -> "Session":
+        """Rebuild a Session from a checkpoint directory alone: the
+        embedded config reconstructs mesh/plan/precision/step, then
+        params and (possibly ZeRO-1-sharded) optimizer state are
+        re-placed under their recorded PartitionSpecs. Continued
+        training is bitwise-identical to the uninterrupted run."""
+        with open(os.path.join(path, _META_FILE)) as f:
+            meta = json.load(f)
+        config = RunConfig.from_json(meta["run_config"])
+        # abstract templates: only the tree STRUCTURE seeds the restore;
+        # every leaf is overwritten from disk
+        sess = _compile(config, abstract_state=True)
+        tree = checkpoint.restore(
+            path, {"params": sess.params, "opt": sess.opt_state},
+            mesh=sess.mesh)
+        sess.params, sess.opt_state = tree["params"], tree["opt"]
+        sess._t = checkpoint.latest_step(path)
+        return sess
+
+    # ------------------------------------------------------- lifecycle ----
+    def close(self) -> None:
+        for tmp in self._tmpdirs:
+            tmp.cleanup()
+        self._tmpdirs = []
+
+    def __enter__(self) -> "Session":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -233,8 +233,6 @@ class ConvNetConfig:
     batchnorm: bool = True
     base_channels: int = 32  # unet3d
     depth: int = 4  # unet3d levels
-    supports_decode: bool = False
-    subquadratic: bool = True  # conv is local
 
     def param_count(self) -> int:
         if self.arch == "cosmoflow":

@@ -1,7 +1,11 @@
 """CosmoFlow (paper Table I, extended model of SIV): n=log2(W)-2 conv
 blocks, channels (16,32,64,128,256,256,256), batch-norm, FC 2048-256-4.
-Variants for 128^3 / 256^3 / 512^3 input volumes."""
-import dataclasses
+Variants for 128^3 / 256^3 / 512^3 input volumes.
+
+This module is also the canonical run preset for the CosmoFlow example
+driver: ``run_preset()`` returns the ``repro.api.RunConfig`` the
+``examples/train_cosmoflow.py`` CLI starts from, so model shapes and
+hyperparameters live here once instead of being duplicated inline."""
 from repro.configs.base import ConvNetConfig
 
 
@@ -19,3 +23,24 @@ SMOKE = ConvNetConfig(
     input_width=32, in_channels=2, out_dim=4,
     conv_channels=(4, 8, 16), fc_dims=(64, 32), batchnorm=True,
 )
+
+
+def big_config(width: int = 64) -> ConvNetConfig:
+    """~100M-param CosmoFlow variant (the e2e example's model): wider
+    channels + wider FC head at a CPU-trainable input width."""
+    return ConvNetConfig(
+        name=f"cosmoflow-big-{width}", family="conv3d", arch="cosmoflow",
+        input_width=width, in_channels=1, out_dim=4,
+        conv_channels=(32, 64, 128, 256, 512), fc_dims=(2048, 256),
+        batchnorm=True)
+
+
+def run_preset(width: int = 64):
+    """Canonical ``RunConfig`` for the CosmoFlow e2e example
+    (``examples/train_cosmoflow.py``): the ~100M-param variant, LR
+    1e-3 linearly decayed over 300 steps, grad clip 1.0."""
+    from repro.api.config import RunConfig  # deferred: api imports configs
+
+    return RunConfig(model=big_config(width), global_batch=4,
+                     lr=1e-3, lr_schedule="linear_decay", grad_clip=1.0,
+                     total_steps=300)

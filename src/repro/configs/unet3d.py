@@ -1,7 +1,9 @@
 """3D U-Net (Cicek et al., MICCAI 2016) at 256^3 (paper SII-C/SV-A):
 3 encoder levels + bottleneck, base 32 channels, deconv upsampling,
-per-voxel softmax over 3 classes (LiTS liver/lesion/background)."""
-import dataclasses
+per-voxel softmax over 3 classes (LiTS liver/lesion/background).
+
+Also the canonical run preset for the U-Net example driver
+(``run_preset()`` — consumed by ``examples/train_unet3d.py``)."""
 from repro.configs.base import ConvNetConfig
 
 CONFIG = ConvNetConfig(
@@ -13,3 +15,13 @@ SMOKE = ConvNetConfig(
     name="unet3d-smoke", family="conv3d", arch="unet3d", input_width=16,
     in_channels=1, out_dim=3, base_channels=4, depth=2, batchnorm=True,
 )
+
+
+def run_preset(full: bool = False):
+    """Canonical ``RunConfig`` for the U-Net e2e example: the smoke
+    variant by default (the 256^3 config is dry-run scale on CPU), LR
+    1e-3 linearly decayed over 30 steps."""
+    from repro.api.config import RunConfig  # deferred: api imports configs
+
+    return RunConfig(model=CONFIG if full else SMOKE, global_batch=2,
+                     lr=1e-3, lr_schedule="linear_decay", total_steps=30)

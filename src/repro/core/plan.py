@@ -156,6 +156,24 @@ class ParallelPlan:
         return tuple(out)
 
     @property
+    def data_degree(self) -> int:
+        """Product of the entry stage's batch-axis degrees — the plan's
+        data-parallel way count (validation, pinned configs)."""
+        d = 1
+        for a in self.stages[0].batch_axes:
+            d *= self.degree(a)
+        return d
+
+    @property
+    def spatial_degree(self) -> int:
+        """Product of every spatial axis degree any stage references —
+        the plan's spatial way count."""
+        d = 1
+        for a in self.spatial_axis_names:
+            d *= self.degree(a)
+        return d
+
+    @property
     def loss_redundancy(self) -> int:
         """How many times each sample's loss is computed at the final
         stage: the product of degrees of spatial axes that ended up
@@ -543,11 +561,16 @@ def plan_convnet(
     if not feasible:
         if best_infeasible is not None:
             p, mem = best_infeasible
-            raise ValueError(
+            err = ValueError(
                 f"no plan fits memory_budget_bytes="
                 f"{memory_budget_bytes / 2 ** 30:.2f}GiB; closest is "
                 f"{p.name} at {mem.describe()} — raise the budget, the "
                 f"spatial_options, or allow lower precision")
+            # structured floor for callers that rephrase the error
+            # (repro.api): the min modeled peak over every candidate
+            err.best_infeasible_plan = p
+            err.best_infeasible_mem = mem
+            raise err
         raise ValueError("no admissible plans (spatial degree too large?)")
     # Among near-time-optimal feasible plans (within 1%), prefer the
     # highest precision, then the fewest transitions: precision is never

@@ -1,8 +1,14 @@
 """Generic training launcher: ``--arch <id>`` selects any registered
 architecture (smoke variant by default — full configs are dry-run only on
-this CPU container), builds the mesh + policy + data, and trains.
+this CPU container) and trains it.
+
+Conv nets (the paper's models) go through the public API — one
+``repro.api.compile`` call owns mesh/plan/precision/opt-state assembly
+(DESIGN.md §10). Sequence models keep the GSPMD jit path.
 
     PYTHONPATH=src python -m repro.launch.train --arch gemma2-2b --steps 20
+    PYTHONPATH=src python -m repro.launch.train --arch cosmoflow-512 \
+        --steps 10
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python -m repro.launch.train --arch mamba2-370m \
             --data 2 --model 4 --plan cp --steps 10
@@ -27,6 +33,41 @@ from repro.optim.adam import Adam, warmup_cosine
 from repro.train import checkpoint
 
 
+def train_convnet(args) -> None:
+    """The conv-net path: one declarative config, one ``compile`` call.
+    The Session owns the mesh, the plan, the precision policy, the
+    (possibly ZeRO-1-sharded) optimizer state, and the jitted step."""
+    from repro.api import RunConfig, compile as api_compile
+
+    config = RunConfig(
+        model=args.arch, smoke=not args.full_config, data=args.data,
+        spatial=args.model, global_batch=args.batch,
+        lr=1e-3, lr_schedule="linear_decay", grad_clip=1.0,
+        total_steps=args.steps, checkpoint_dir=args.ckpt)
+    with api_compile(config) as session:
+        print(f"{session.cfg.name}: "
+              f"{session.cfg.param_count() / 1e6:.2f}M params")
+        print(session.describe())
+        n = max(2 * args.batch, 8)
+        loader = session.make_loader(num_samples=n)
+        order = loader.epoch_schedule()
+        t0 = time.time()
+        for i in range(args.steps):
+            lo = (i * args.batch) % n
+            ids = order[lo:lo + args.batch]
+            if len(ids) < args.batch:
+                order, lo = loader.epoch_schedule(), 0
+                ids = order[:args.batch]
+            loss = session.step(loader.load_batch(ids))
+            if i % 5 == 0:
+                sps = (i + 1) * args.batch / (time.time() - t0)
+                print(f"step {i:4d}  loss {float(loss):.4f}  "
+                      f"{sps:.2f} samples/s")
+        if args.ckpt:
+            session.save()
+            print("checkpoint ->", args.ckpt)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=configs.ALL_ARCHS)
@@ -34,8 +75,11 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--data", type=int, default=1)
-    ap.add_argument("--model", type=int, default=1)
-    ap.add_argument("--plan", default="tp", choices=["tp", "cp", "ep"])
+    ap.add_argument("--model", type=int, default=1,
+                    help="model-parallel degree (conv nets: spatial)")
+    ap.add_argument("--plan", default="tp", choices=["tp", "cp", "ep"],
+                    help="sequence-model GSPMD plan (conv nets plan via "
+                         "repro.api)")
     ap.add_argument("--full-config", action="store_true",
                     help="use the full (non-smoke) config — dry-run scale")
     ap.add_argument("--ckpt", default=None)
@@ -44,8 +88,7 @@ def main():
     cfg = (configs.get_config(args.arch) if args.full_config
            else configs.get_smoke_config(args.arch))
     if isinstance(cfg, ConvNetConfig):
-        raise SystemExit("conv nets: use examples/train_cosmoflow.py / "
-                         "examples/train_unet3d.py")
+        return train_convnet(args)
     mesh = None
     policy = NO_POLICY
     if args.data * args.model > 1:

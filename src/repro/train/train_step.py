@@ -12,6 +12,14 @@ Two distribution styles, matching DESIGN.md:
   ``all_gather`` (``reduce_scatter``).
 * Sequence models: GSPMD ``jax.jit`` with sharding constraints from the
   ShardingPolicy; XLA inserts the collectives.
+
+This is the INTERNAL assembly layer. Drivers (examples, launchers,
+bench e2e paths) go through ``repro.api.compile`` (DESIGN.md §10),
+which owns the mesh/plan/precision/opt-state threading and lowers to
+the builders here; calling ``make_convnet_train_step`` directly from a
+driver is deprecated. Tests and benches still pin these builders
+directly — they are the substrate the Session's parity is measured
+against.
 """
 from __future__ import annotations
 
