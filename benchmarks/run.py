@@ -26,6 +26,10 @@
                         (compile) cost and Session-driven step-time
                         parity vs the raw make_convnet_train_step
                         assembly (target <=2% overhead)
+  resilience            resilient runtime (DESIGN.md §11): guarded-step
+                        overhead vs the unguarded PR-5 step (target
+                        <=2%), and supervisor recovery time vs
+                        checkpoint interval under injected device loss
 
 Output: ``name,us_per_call,derived`` CSV rows (derived = the figure's
 headline quantity). Run: ``PYTHONPATH=src python -m benchmarks.run
@@ -964,6 +968,85 @@ def bench_api(quick=False):
     session.close()
 
 
+# --------------------------------------------------------- resilience -----
+def bench_resilience(quick=False):
+    """Resilient runtime (DESIGN.md §11), two views.
+
+    1. Guarded vs unguarded step time. The guard adds one psum-agreed
+       finiteness check plus an exact ``where`` select per leaf to the
+       compiled step; the target is <=2% overhead vs the PR-5 unguarded
+       step. Interleaved trimmed-mean timing, like the api bench, so
+       machine drift on this oversubscribed box hits both cells equally.
+    2. Supervisor recovery time vs checkpoint interval: a
+       ``device.loss`` kill mid-run for save_every in {1, 2, 4}; the
+       recovery column is wall time from the failure to re-reaching the
+       failed step (restore + replay of the steps since the last
+       checkpoint — the interval/replay trade the §11 design argues).
+    """
+    import dataclasses
+    import tempfile
+
+    from repro import configs
+    from repro.api import RunConfig, compile as api_compile, supervisor
+    from repro.core import faults
+
+    cfg = dataclasses.replace(configs.get_smoke_config("cosmoflow-512"),
+                              input_width=16 if quick else 32)
+    gb, W = 2, cfg.input_width
+    base = RunConfig(model=cfg, global_batch=gb, lr=1e-3,
+                     lr_schedule="constant", grad_clip=1.0)
+    x = jax.random.normal(jax.random.PRNGKey(0),
+                          (gb, W, W, W, cfg.in_channels))
+    y = jax.random.normal(jax.random.PRNGKey(1), (gb, cfg.out_dim))
+
+    # 1. guarded vs unguarded step, interleaved trimmed mean
+    sessions = {
+        "unguarded": api_compile(dataclasses.replace(base, guard=False)),
+        "guarded": api_compile(dataclasses.replace(base, guard=True)),
+    }
+    calls = {k: (lambda s=s: jax.block_until_ready(s.step(x, y)))
+             for k, s in sessions.items()}
+    for c in calls.values():
+        c(); c()  # both compiles (init-placed and committed params)
+    rounds = 10 if quick else 30
+    samples = {k: [] for k in calls}
+    for _ in range(rounds):
+        for k, c in calls.items():
+            t0 = time.perf_counter()
+            c()
+            samples[k].append(time.perf_counter() - t0)
+
+    def trimmed(v):
+        v = sorted(v)
+        k = max(len(v) // 5, 1)
+        core = v[k:-k] or v
+        return sum(core) / len(core) * 1e6
+
+    un_us, gd_us = trimmed(samples["unguarded"]), trimmed(samples["guarded"])
+    emit("resilience.step.unguarded", un_us, f"rounds={rounds};W={W}")
+    emit("resilience.step.guarded", gd_us,
+         f"overhead={100 * (gd_us - un_us) / un_us:+.2f}%_vs_unguarded;"
+         f"target<=2%")
+    for s in sessions.values():
+        s.close()
+
+    # 2. recovery time vs checkpoint interval (injected kill mid-run)
+    steps, kill_at = (6, 5) if quick else (8, 7)
+    for save_every in (1, 2, 4):
+        with tempfile.TemporaryDirectory() as root:
+            cfgr = dataclasses.replace(base, checkpoint_dir=root)
+            with faults.active(
+                    faults.FaultSpec("device.loss", at_steps=(kill_at,),
+                                     max_fires=1), seed=0):
+                r = supervisor.run(cfgr, steps, save_every=save_every)
+            r.session.close()
+        replayed = kill_at - (kill_at // save_every) * save_every
+        emit(f"resilience.recovery.save_every{save_every}",
+             r.recovery_s[0] * 1e6 if r.recovery_s else 0.0,
+             f"kill_at_step{kill_at};replayed_steps={replayed};"
+             f"restarts={r.restarts};resumes={r.resumes}")
+
+
 BENCHES = {
     "fig4_strong_scaling": bench_fig4_strong_scaling,
     "fig7_unet_strong": bench_fig7_unet_strong,
@@ -978,6 +1061,7 @@ BENCHES = {
     "plan": bench_plan,
     "memory": bench_memory,
     "api": bench_api,
+    "resilience": bench_resilience,
 }
 
 

@@ -14,8 +14,16 @@ checkpoint kwarg threading the drivers used to hand-assemble;
 ``Session`` lowers to ``repro.train.train_step`` (the internal layer —
 deprecated for direct use in drivers, still the substrate the parity
 tests pin).
+
+For long campaigns, ``repro.api.supervisor.run(config, steps)`` wraps
+the Session in the §11 recovery loop: guarded steps, a step watchdog,
+atomic keep-last-K checkpoints, auto-resume from the newest valid one,
+and elastic re-planning when the device count shrinks.
 """
+from repro.api import supervisor
 from repro.api.config import RunConfig, RunConfigError
 from repro.api.session import Report, Session, compile
+from repro.api.supervisor import SupervisorReport
 
-__all__ = ["RunConfig", "RunConfigError", "Report", "Session", "compile"]
+__all__ = ["RunConfig", "RunConfigError", "Report", "Session", "compile",
+           "supervisor", "SupervisorReport"]

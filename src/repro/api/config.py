@@ -79,6 +79,9 @@ class RunConfig:
     # --- checkpoint policy ---
     checkpoint_dir: Optional[str] = None
     save_every: Optional[int] = None  # steps between auto-saves
+    keep_last: Optional[int] = None   # retention: stepped dirs + GC (§11)
+    # --- resilience (DESIGN.md §11) ---
+    guard: bool = True  # psum-agreed skip of non-finite steps
     # --- data source: a HyperslabStore root, or None for synthetic ---
     data_dir: Optional[str] = None
 
@@ -186,6 +189,18 @@ class RunConfig:
                 "save_every",
                 "periodic saving requested without a checkpoint_dir",
                 "set checkpoint_dir=, or drop save_every")
+        if self.keep_last is not None:
+            if not isinstance(self.keep_last, int) or self.keep_last < 1:
+                raise RunConfigError(
+                    "keep_last", f"must be an int >= 1, got "
+                    f"{self.keep_last!r}",
+                    "pass how many step checkpoints to retain")
+            if self.checkpoint_dir is None:
+                raise RunConfigError(
+                    "keep_last",
+                    "checkpoint retention requested without a "
+                    "checkpoint_dir",
+                    "set checkpoint_dir=, or drop keep_last")
 
         if device_count is None:
             import jax

@@ -30,6 +30,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.api.config import RunConfig, RunConfigError
 from repro.configs.base import ConvNetConfig
+from repro.core import faults
 from repro.core import flags
 from repro.core import memory as memory_lib
 from repro.core import plan as plan_lib
@@ -62,6 +63,9 @@ class Report:
     modeled_peak: "memory_lib.MemoryBreakdown"
     memory_budget_bytes: Optional[float]
     predicted_step_s: float
+    # §11 guard telemetry: skipped steps, fp16 loss scale, I/O retries,
+    # auto-resumes — empty dict for a pre-guard report
+    telemetry: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     def __str__(self) -> str:
         budget = ("none" if self.memory_budget_bytes is None
@@ -78,7 +82,10 @@ class Report:
             f"  params {self.param_count / 1e6:.2f}M  "
             f"modeled peak/device {self.modeled_peak.describe()}\n"
             f"  budget {budget}  predicted step "
-            f"{self.predicted_step_s * 1e3:.2f}ms (perf model, V100)")
+            f"{self.predicted_step_s * 1e3:.2f}ms (perf model, V100)"
+            + (("\n  guard: " + "  ".join(
+                f"{k}={v:g}" for k, v in sorted(self.telemetry.items())))
+               if self.telemetry else ""))
 
 
 def _build_optimizer(config: RunConfig) -> Adam:
@@ -185,7 +192,8 @@ def _compile(config: RunConfig, *, abstract_state: bool) -> "Session":
     step_fn = train_step_lib.make_convnet_train_step(
         cfg, mesh, optimizer, global_batch=config.global_batch,
         use_pallas=config.use_pallas, overlap=config.overlap_halo,
-        grad_comm=grad_comm, plan=plan, precision=precision)
+        grad_comm=grad_comm, plan=plan, precision=precision,
+        guard=config.guard)
     return Session(config, cfg, mesh, plan, precision, grad_comm,
                    optimizer, params, opt_state, step_fn)
 
@@ -209,6 +217,13 @@ class Session:
         self._t = 0
         self._eval_fns: Dict[Any, Any] = {}
         self._tmpdirs = []
+        self._loaders = []
+        # §11 telemetry: guarded-step skip counter kept as a lazy jax
+        # accumulator (no per-step host sync), resumes set by the
+        # supervisor / restore path
+        self._guarded_steps = 0
+        self._applied_acc = jnp.zeros((), jnp.float32)
+        self.resumes = 0
 
     # ----------------------------------------------------------- train ----
     @property
@@ -219,15 +234,36 @@ class Session:
         """Run one training step on a global batch (an ``(x, y)`` pair,
         or ``step(x, y)``) and return the loss. Params, optimizer state,
         and the per-step dropout seed are threaded internally; the
-        checkpoint policy (``save_every``) fires here."""
+        checkpoint policy (``save_every``) fires here.
+
+        §11 fault sites fire here too: ``comm.stall`` (host-side sleep
+        the supervisor's watchdog must catch), ``device.loss`` (raises
+        ``DeviceLost``), and ``grads.nonfinite`` (poisons the batch so
+        the in-graph guard must skip the update)."""
         x, y = batch if y is None else (batch, y)
-        self.params, self.opt_state, loss = self._step_fn(
-            self.params, self.opt_state, x, y,
-            jnp.asarray(self._t, jnp.int32))
+        faults.fire("comm.stall", step=self._t)
+        faults.fire("device.loss", step=self._t)
+        if faults.fire("grads.nonfinite", step=self._t):
+            x = x * jnp.nan  # loss and every gradient go non-finite
+        seed = jnp.asarray(self._t, jnp.int32)
+        if self.config.guard:
+            self.params, self.opt_state, loss, applied = self._step_fn(
+                self.params, self.opt_state, x, y, seed)
+            self._guarded_steps += 1
+            self._applied_acc = self._applied_acc + applied
+        else:
+            self.params, self.opt_state, loss = self._step_fn(
+                self.params, self.opt_state, x, y, seed)
         self._t += 1
         if (self.config.checkpoint_dir and self.config.save_every
                 and self._t % self.config.save_every == 0):
-            self.save()
+            if self.config.keep_last is not None:
+                self.save(checkpoint.step_dir(self.config.checkpoint_dir,
+                                              self._t))
+                checkpoint.gc_steps(self.config.checkpoint_dir,
+                                    self.config.keep_last)
+            else:
+                self.save()
         return loss
 
     def evaluate(self, x, y):
@@ -260,6 +296,25 @@ class Session:
         return loss, None
 
     # --------------------------------------------------- introspection ----
+    def telemetry(self) -> Dict[str, float]:
+        """§11 guard/recovery counters: ``skipped_steps`` (guarded steps
+        whose update was vetoed), ``loss_scale`` (the live fp16 scale, 1
+        otherwise), ``loader_retries`` (transient store-read failures
+        absorbed by backoff, summed over this Session's loaders), and
+        ``resumes`` (checkpoint auto-resumes, set by the supervisor).
+        Reading ``skipped_steps`` syncs the lazy accumulator."""
+        skipped = (self._guarded_steps - float(self._applied_acc)
+                   if self._guarded_steps else 0.0)
+        scale = (float(self.opt_state.loss_scale)
+                 if isinstance(self.opt_state, precision_lib.MPState)
+                 else 1.0)
+        retries = sum(ld.store.retries for ld in self._loaders)
+        return {"steps": float(self._t),
+                "skipped_steps": round(skipped),
+                "loss_scale": scale,
+                "loader_retries": float(retries),
+                "resumes": float(self.resumes)}
+
     def describe(self) -> Report:
         """One report: the chosen plan, the modeled per-device peak
         (``core/memory.py``), and the predicted step time
@@ -287,7 +342,8 @@ class Session:
             param_count=self.cfg.param_count(),
             modeled_peak=peak,
             memory_budget_bytes=budget,
-            predicted_step_s=t)
+            predicted_step_s=t,
+            telemetry=self.telemetry())
 
     def profile(self, batch=None, reps: int = 3) -> Dict[str, float]:
         """Measured phase attribution (DESIGN.md §4): seconds for the
@@ -314,6 +370,8 @@ class Session:
         out["backward"] = max(out["bwd"] - out["fwd"], 0.0)
         out["comm"] = max(out["grad_comm"] - out["bwd"], 0.0)
         out["optimizer"] = max(out["step"] - out["grad_comm"], 0.0)
+        for k, v in self.telemetry().items():
+            out[f"telemetry.{k}"] = v
         return out
 
     def _synthetic_batch(self):
@@ -357,26 +415,30 @@ class Session:
         x_spec = P(dspec, *entry.spatial_axes, None)
         label_spec = (P(dspec, *entry.spatial_axes)
                       if self.cfg.arch == "unet3d" else None)
-        return pipeline.SpatialParallelLoader(
+        loader = pipeline.SpatialParallelLoader(
             store.HyperslabStore(root), self.mesh, x_spec,
             global_batch=self.config.global_batch, seed=seed, cache=cache,
             label_spec=label_spec)
+        self._loaders.append(loader)  # §11 telemetry: retry counters
+        return loader
 
     # ------------------------------------------------------ checkpoint ----
     def save(self, path: Optional[str] = None) -> str:
         """Checkpoint params + optimizer state (fp32 masters, per-leaf
         PartitionSpecs) AND the resolved run description, so
         ``Session.restore(path)`` rebuilds the whole run from the
-        checkpoint alone."""
+        checkpoint alone. The whole directory — leaves, manifest with
+        per-leaf CRCs, and the embedded config — is published by one
+        atomic rename (§11): a crash mid-save cannot corrupt an existing
+        checkpoint."""
         path = path or self.config.checkpoint_dir
         if path is None:
             raise ValueError("no path: pass save(path) or set "
                              "RunConfig.checkpoint_dir")
-        checkpoint.save(path, {"params": self.params, "opt": self.opt_state},
-                        step=self._t, precision=self.precision)
         meta = {"run_config": self._pinned_config().to_json()}
-        with open(os.path.join(path, _META_FILE), "w") as f:
-            json.dump(meta, f, indent=1)
+        checkpoint.save(path, {"params": self.params, "opt": self.opt_state},
+                        step=self._t, precision=self.precision,
+                        extra_files={_META_FILE: meta})
         return path
 
     def _pinned_config(self) -> RunConfig:
@@ -394,7 +456,19 @@ class Session:
         embedded config reconstructs mesh/plan/precision/step, then
         params and (possibly ZeRO-1-sharded) optimizer state are
         re-placed under their recorded PartitionSpecs. Continued
-        training is bitwise-identical to the uninterrupted run."""
+        training is bitwise-identical to the uninterrupted run.
+
+        ``path`` may also be a retention ROOT of ``step_<n>``
+        checkpoints (``keep_last``/supervisor layout): the newest step
+        that passes CRC validation is restored — a corrupt or partial
+        newest checkpoint falls back to its predecessor (§11)."""
+        if not os.path.exists(os.path.join(path, _META_FILE)):
+            for _, p in reversed(checkpoint.list_steps(path)):
+                if checkpoint.validate(p):
+                    return cls.restore(p)
+            raise FileNotFoundError(
+                f"no checkpoint at {path}: neither {_META_FILE} nor a "
+                f"valid step_<n> directory")
         with open(os.path.join(path, _META_FILE)) as f:
             meta = json.load(f)
         config = RunConfig.from_json(meta["run_config"])

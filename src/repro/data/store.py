@@ -8,40 +8,88 @@ which is what lets I/O strong-scale with the spatial partitioning.
 
 Byte counters are kept so the I/O benchmark can report per-rank PFS traffic
 (the quantity that must shrink as spatial parallelism grows — paper Fig. 5).
+
+Transient-failure handling (DESIGN.md §11): at the paper's scale a PFS
+read fails routinely and transiently; every store read retries with
+exponential backoff through a capped attempt count (the ``loader.read``
+fault site fires inside the retry loop, so injected transients exercise
+exactly this path). A read that exhausts its attempts raises
+``StoreReadError`` naming the shard file — not a bare ``OSError`` three
+layers down. ``retries`` counts absorbed failures for the §11 telemetry.
 """
 from __future__ import annotations
 
 import json
 import os
-from typing import Dict, Optional, Sequence, Tuple
+import time
+from typing import Callable, Dict, Optional, Sequence, Tuple, TypeVar
 
 import numpy as np
+
+from repro.core import faults
+
+MAX_READ_ATTEMPTS = 4
+BACKOFF_BASE_S = 0.005  # 5ms, 10ms, 20ms, ... between attempts
+
+T = TypeVar("T")
+
+
+class StoreReadError(IOError):
+    """A store read failed every attempt; names the file and the count."""
+
+    def __init__(self, path: str, attempts: int, last: BaseException):
+        self.path = path
+        self.attempts = attempts
+        super().__init__(
+            f"store read of {path!r} failed after {attempts} attempts "
+            f"(last error: {last})")
 
 
 class HyperslabStore:
     def __init__(self, root: str):
         self.root = root
+        self.bytes_read = 0
+        self.reads = 0
+        self.retries = 0
         with open(os.path.join(root, "index.json")) as f:
             self.index = json.load(f)
         self.num_samples = self.index["num_samples"]
         self.sample_shape = tuple(self.index["sample_shape"])  # (D,H,W,C)
         self.target_dim = self.index.get("target_dim", 0)
         self.label_kind = self.index.get("label_kind", "vector")
-        self.bytes_read = 0
-        self.reads = 0
         self._targets = (
-            np.load(os.path.join(root, "targets.npy"))
+            self._retrying(os.path.join(root, "targets.npy"),
+                           lambda: np.load(os.path.join(root, "targets.npy")))
             if os.path.exists(os.path.join(root, "targets.npy")) else None
         )
 
     def _path(self, i: int, what: str = "x") -> str:
         return os.path.join(self.root, f"{what}_{i:06d}.npy")
 
+    def _retrying(self, path: str, read: Callable[[], T]) -> T:
+        """Run ``read`` with capped exponential-backoff retries on I/O
+        errors (missing files don't retry — they are config errors, and
+        waiting on them would only mask the message)."""
+        last: BaseException
+        for attempt in range(MAX_READ_ATTEMPTS):
+            try:
+                faults.fire("loader.read", path=path)
+                return read()
+            except FileNotFoundError:
+                raise
+            except OSError as e:
+                last = e
+                if attempt + 1 < MAX_READ_ATTEMPTS:
+                    self.retries += 1
+                    time.sleep(BACKOFF_BASE_S * 2 ** attempt)
+        raise StoreReadError(path, MAX_READ_ATTEMPTS, last)
+
     def read_hyperslab(self, i: int, slices: Tuple[slice, ...],
                        what: str = "x") -> np.ndarray:
         """Read one contiguous (D,H,W,C) fragment via memory map."""
-        mm = np.load(self._path(i, what), mmap_mode="r")
-        out = np.array(mm[slices])
+        path = self._path(i, what)
+        out = self._retrying(
+            path, lambda: np.array(np.load(path, mmap_mode="r")[slices]))
         self.bytes_read += out.nbytes
         self.reads += 1
         return out
@@ -56,6 +104,7 @@ class HyperslabStore:
     def reset_counters(self):
         self.bytes_read = 0
         self.reads = 0
+        self.retries = 0
 
 
 def write_dataset(

@@ -1,9 +1,25 @@
-"""Sharded checkpointing without external deps.
+"""Crash-safe sharded checkpointing without external deps.
 
 Parameters are saved as one ``.npy`` per leaf (gathered to host) plus a
 manifest with the pytree structure; restore re-places leaves under the
 given shardings. Adequate for the example drivers; a production deployment
 would swap in tensorstore/orbax behind the same interface.
+
+Crash safety (DESIGN.md §11): ``save`` never touches an existing
+checkpoint in place. Every leaf (and the manifest, and any
+``extra_files``) is written into a sibling ``<dir>.tmp-<nonce>``
+directory, which is *renamed* into place only once complete — a writer
+killed between leaf writes (the ``checkpoint.write`` fault site fires
+there) leaves the previous checkpoint untouched and a stale ``.tmp``
+directory that every discovery function ignores. The manifest records a
+CRC32 per leaf file, so ``validate``/``restore`` detect on-disk
+corruption (``CheckpointCorrupt``) instead of silently loading garbage.
+
+Multi-checkpoint retention: ``save_step``/``latest_valid_step``/
+``gc_steps`` manage a root of ``step_<n>`` checkpoint directories —
+keep-last-K retention with GC of old steps and stale temp dirs, and a
+restore path that walks back to the newest checkpoint that still
+*validates* when the newest one is corrupt or partial.
 
 Sharded-state round trip: ``save`` records each leaf's ``PartitionSpec``
 in the manifest (when the leaf is a jax.Array with a ``NamedSharding`` —
@@ -17,12 +33,34 @@ from __future__ import annotations
 import json
 import os
 import re
-from typing import Any, List, Optional
+import shutil
+import uuid
+import zlib
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.core import faults
+
+MANIFEST = "manifest.json"
+_TMP_MARK = ".tmp-"
+_OLD_MARK = ".old-"
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint could not be read or written."""
+
+
+class CheckpointCorrupt(CheckpointError):
+    """A checkpoint failed validation (missing/garbled leaf, bad CRC)."""
+
+    def __init__(self, ckpt_dir: str, detail: str):
+        self.ckpt_dir = ckpt_dir
+        super().__init__(f"corrupt checkpoint {ckpt_dir}: {detail}")
 
 
 def _sanitize(path: str) -> str:
@@ -53,10 +91,27 @@ def _leaf_spec(leaf: Any) -> Optional[List[Any]]:
     return None
 
 
+def _publish(tmp: str, final: str) -> None:
+    """Atomically swap the complete ``tmp`` directory into place. A
+    fresh target is a single rename; replacing an existing checkpoint
+    renames it aside first (the only non-atomic window is between the
+    two renames — both directories are valid throughout)."""
+    if not os.path.exists(final):
+        os.rename(tmp, final)
+        return
+    old = f"{final}{_OLD_MARK}{uuid.uuid4().hex[:8]}"
+    os.rename(final, old)
+    os.rename(tmp, final)
+    shutil.rmtree(old, ignore_errors=True)
+
+
 def save(ckpt_dir: str, tree: Any, step: int = 0, *,
-         precision: Optional[str] = None) -> None:
+         precision: Optional[str] = None,
+         extra_files: Optional[Dict[str, Any]] = None) -> None:
     """``precision`` records the training policy (DESIGN.md §9) in the
-    manifest so a restore knows how the run computes.
+    manifest so a restore knows how the run computes. ``extra_files``
+    maps filenames to JSON-serializable objects written inside the same
+    atomic publish (``Session.save`` embeds its pinned run config here).
 
     Half-precision float leaves are widened to fp32 on disk regardless
     (``np.save`` degrades bfloat16 to a raw void dtype), with the
@@ -64,8 +119,15 @@ def save(ckpt_dir: str, tree: Any, step: int = 0, *,
     an exact round trip — UNLESS the manifest carries a ``precision``
     policy: then the widened values ARE the canonical fp32 master
     weights and stay fp32, so a bf16/fp16 training run restores
-    bitwise-identically to its uninterrupted trajectory."""
-    os.makedirs(ckpt_dir, exist_ok=True)
+    bitwise-identically to its uninterrupted trajectory.
+
+    A crash anywhere before the final rename (including the injected
+    ``checkpoint.write`` kill) leaves only a stale ``.tmp`` directory;
+    the previous checkpoint at ``ckpt_dir`` stays intact and valid."""
+    parent = os.path.dirname(os.path.abspath(ckpt_dir))
+    os.makedirs(parent, exist_ok=True)
+    tmp = f"{ckpt_dir}{_TMP_MARK}{uuid.uuid4().hex[:8]}"
+    os.makedirs(tmp)
     leaves, treedef = jax.tree.flatten(tree)
     paths = jax.tree.leaves(
         jax.tree_util.tree_map_with_path(lambda p, _: jax.tree_util.keystr(p),
@@ -79,34 +141,63 @@ def save(ckpt_dir: str, tree: Any, step: int = 0, *,
         orig_dtype = str(arr.dtype)
         if arr.dtype in (jnp.dtype(jnp.bfloat16), jnp.dtype(jnp.float16)):
             arr = arr.astype(np.float32)  # exact widening, npy-safe
-        np.save(os.path.join(ckpt_dir, name), arr)
+        np.save(os.path.join(tmp, name), arr)
+        faults.fire("checkpoint.write", path=os.path.join(tmp, name))
         entry = {"path": p, "file": name, "dtype": orig_dtype,
-                 "shape": list(arr.shape)}
+                 "shape": list(arr.shape),
+                 "crc32": zlib.crc32(np.ascontiguousarray(arr).tobytes())}
         if orig_dtype != str(arr.dtype):
             entry["stored_as"] = str(arr.dtype)
         spec = _leaf_spec(leaf)
         if spec is not None:
             entry["spec"] = spec
         manifest["leaves"].append(entry)
-    with open(os.path.join(ckpt_dir, "manifest.json"), "w") as f:
+    with open(os.path.join(tmp, MANIFEST), "w") as f:
         json.dump(manifest, f)
+    for name, obj in (extra_files or {}).items():
+        with open(os.path.join(tmp, name), "w") as f:
+            json.dump(obj, f, indent=1)
+    _publish(tmp, ckpt_dir)
+
+
+def _load_manifest(ckpt_dir: str) -> dict:
+    with open(os.path.join(ckpt_dir, MANIFEST)) as f:
+        return json.load(f)
+
+
+def _check_crc(ckpt_dir: str, entry: dict, arr: np.ndarray) -> None:
+    want = entry.get("crc32")
+    if want is None:  # pre-§11 manifest: nothing to check against
+        return
+    got = zlib.crc32(np.ascontiguousarray(arr).tobytes())
+    if got != want:
+        raise CheckpointCorrupt(
+            ckpt_dir, f"leaf {entry['path']!r} ({entry['file']}) CRC "
+            f"{got:#010x} != manifest {want:#010x}")
 
 
 def restore(ckpt_dir: str, like: Any, shardings: Optional[Any] = None,
-            *, mesh=None) -> Any:
+            *, mesh=None, verify: bool = True) -> Any:
     """Load a tree saved by ``save``. Placement per leaf, in priority
     order: the ``shardings`` tree (when given), the manifest's recorded
     ``PartitionSpec`` on ``mesh`` (when given — restores ZeRO-1 sharded
     optimizer state under the spec it was sharded with), else a plain
-    replicated ``jnp`` array."""
-    with open(os.path.join(ckpt_dir, "manifest.json")) as f:
-        manifest = json.load(f)
+    replicated ``jnp`` array. ``verify`` checks each leaf against its
+    manifest CRC and raises ``CheckpointCorrupt`` on mismatch."""
+    manifest = _load_manifest(ckpt_dir)
     by_path = {l["path"]: l for l in manifest["leaves"]}
     keep_masters = manifest.get("precision") is not None
 
     def load_leaf(path, leaf, sh=None):
         entry = by_path[jax.tree_util.keystr(path)]
-        arr = np.load(os.path.join(ckpt_dir, entry["file"]))
+        try:
+            arr = np.load(os.path.join(ckpt_dir, entry["file"]))
+        except (OSError, ValueError) as e:
+            raise CheckpointCorrupt(
+                ckpt_dir, f"leaf {entry['path']!r} ({entry['file']}) "
+                f"unreadable: {e}") from e
+        if verify:
+            _check_crc(ckpt_dir, entry, arr)
         if "stored_as" in entry and not keep_masters:
             # widened-for-npy leaf of a policy-less save: narrow back to
             # the recorded dtype (exact — the widening was exact too)
@@ -122,13 +213,101 @@ def restore(ckpt_dir: str, like: Any, shardings: Optional[Any] = None,
     return jax.tree_util.tree_map_with_path(load_leaf, like, shardings)
 
 
+def validate(ckpt_dir: str) -> bool:
+    """Whether ``ckpt_dir`` holds a complete, uncorrupted checkpoint:
+    the manifest parses and every leaf file exists with a matching CRC.
+    Reads every leaf — restore-cost, not stat-cost; meant for recovery
+    decisions, not hot paths."""
+    try:
+        manifest = _load_manifest(ckpt_dir)
+    except (OSError, ValueError, KeyError):
+        return False
+    try:
+        for entry in manifest["leaves"]:
+            arr = np.load(os.path.join(ckpt_dir, entry["file"]))
+            _check_crc(ckpt_dir, entry, arr)
+    except (OSError, ValueError, KeyError, CheckpointCorrupt):
+        return False
+    return True
+
+
+# ------------------------------------------------- stepped multi-ckpt ----
+def step_dir(root: str, step: int) -> str:
+    """The per-step checkpoint directory under a retention root."""
+    return os.path.join(root, f"step_{step:08d}")
+
+
+def list_steps(root: str) -> List[Tuple[int, str]]:
+    """(step, path) for every published step directory under ``root``,
+    ascending. Partial/temp/renamed-aside directories never match."""
+    if not os.path.isdir(root):
+        return []
+    out = []
+    for name in os.listdir(root):
+        m = _STEP_RE.match(name)
+        if m and os.path.isdir(os.path.join(root, name)):
+            out.append((int(m.group(1)), os.path.join(root, name)))
+    return sorted(out)
+
+
+def latest_valid_step(root: str) -> Optional[Tuple[int, str]]:
+    """The newest step checkpoint under ``root`` that VALIDATES — a
+    corrupt or partial newest step falls back to its predecessor."""
+    for step, path in reversed(list_steps(root)):
+        if validate(path):
+            return step, path
+    return None
+
+
+def save_step(root: str, tree: Any, step: int, *,
+              precision: Optional[str] = None,
+              extra_files: Optional[Dict[str, Any]] = None,
+              keep_last: Optional[int] = None) -> str:
+    """Atomic ``save`` into ``step_dir(root, step)``; with ``keep_last``,
+    GC older step checkpoints (and stale temp dirs) afterwards."""
+    path = step_dir(root, step)
+    save(path, tree, step, precision=precision, extra_files=extra_files)
+    if keep_last is not None:
+        gc_steps(root, keep_last)
+    return path
+
+
+def gc_steps(root: str, keep_last: int) -> List[str]:
+    """Delete all but the newest ``keep_last`` step checkpoints, plus any
+    stale ``.tmp``/``.old`` debris from interrupted saves. Returns the
+    removed paths."""
+    if keep_last < 1:
+        raise ValueError(f"keep_last must be >= 1, got {keep_last}")
+    removed = []
+    steps = list_steps(root)
+    for _, path in steps[:-keep_last] if len(steps) > keep_last else []:
+        shutil.rmtree(path, ignore_errors=True)
+        removed.append(path)
+    if os.path.isdir(root):
+        for name in os.listdir(root):
+            if _TMP_MARK in name or _OLD_MARK in name:
+                shutil.rmtree(os.path.join(root, name), ignore_errors=True)
+                removed.append(os.path.join(root, name))
+    return removed
+
+
 def latest_step(ckpt_dir: str) -> int:
-    with open(os.path.join(ckpt_dir, "manifest.json")) as f:
-        return json.load(f)["step"]
+    """The step of the checkpoint at ``ckpt_dir``: a flat checkpoint's
+    manifest step, or — for a retention root of ``step_<n>`` dirs — the
+    newest VALID step (partial ``.tmp`` directories and corrupt
+    checkpoints are ignored)."""
+    manifest = os.path.join(ckpt_dir, MANIFEST)
+    if os.path.exists(manifest):
+        with open(manifest) as f:
+            return json.load(f)["step"]
+    found = latest_valid_step(ckpt_dir)
+    if found is None:
+        raise FileNotFoundError(
+            f"no checkpoint manifest or valid step_<n> dirs in {ckpt_dir}")
+    return found[0]
 
 
 def saved_precision(ckpt_dir: str) -> Optional[str]:
     """The precision policy the checkpointed run trained under, or None
     for checkpoints that never recorded one (pre-§9, or pure fp32)."""
-    with open(os.path.join(ckpt_dir, "manifest.json")) as f:
-        return json.load(f).get("precision")
+    return _load_manifest(ckpt_dir).get("precision")

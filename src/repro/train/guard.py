@@ -1,0 +1,63 @@
+"""Guarded stepping: psum-agreed non-finite detection (DESIGN.md §11).
+
+The fp16 policy already skips overflowed steps inside ``MixedPrecision``
+(DESIGN.md §9) — but fp32/bf16 runs have no such net: one NaN loss (bad
+sample, numerical blowup, flipped bit) silently poisons the params and
+every step after them. The guard closes that hole for ALL precisions:
+
+* every device computes ``isfinite(loss) & all_finite(grads)`` on its
+  local view and the verdict is ``psum``-agreed across every mesh axis —
+  the ZeRO-1 path sees per-device gradient *shards*, so a NaN anywhere
+  must veto the update everywhere or params would diverge across ranks;
+* an un-applied step holds params and optimizer state exactly (a
+  ``select`` against the previous values — bitwise, not approximate),
+  so a skipped step is indistinguishable from never having run;
+* under fp16 the verdict is routed *through* the §9 skip machine (by
+  poisoning the gradients when only the loss is non-finite) instead of
+  wrapping around it — an outer hold would also hold the loss-scale
+  backoff, and the scale must still halve on overflow.
+
+When no fault fires the guard is value-transparent: ``where(True, new,
+old)`` returns ``new`` exactly, so a guarded run's trajectory is
+bitwise-identical to an unguarded one (pinned by tests; the resilience
+bench prices the overhead — one flag psum + one select per leaf).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import precision as precision_lib
+
+
+def agreed_finite(loss: jax.Array, grads: Any,
+                  axes: Tuple[str, ...]) -> jax.Array:
+    """Scalar bool, identical on every device: the (already psummed, so
+    already agreed) loss is finite AND no device holds a non-finite
+    gradient leaf. The gradient verdict is agreed by psum-counting bad
+    devices over ``axes`` — grads may be data-partial or ZeRO-sharded."""
+    ok_local = precision_lib.all_finite(grads)
+    bad = lax.psum(jnp.where(ok_local, 0.0, 1.0), axes)
+    return jnp.logical_and(jnp.isfinite(loss), bad == 0.0)
+
+
+def tree_select(flag: jax.Array, new: Any, old: Any) -> Any:
+    """``new`` where ``flag`` else ``old``, leafwise. An XLA select —
+    the taken branch's values pass through bitwise (NaNs in the
+    discarded branch do NOT propagate, unlike arithmetic blends)."""
+    return jax.tree.map(lambda a, b: jnp.where(flag, a, b), new, old)
+
+
+def poison_unless(flag: jax.Array, grads: Any) -> Any:
+    """NaN every gradient leaf unless ``flag`` — the bridge that hands a
+    loss-finiteness veto to ``MixedPrecision``'s own skip machinery, so
+    the fp16 path keeps exactly one authority over holds and loss-scale
+    backoff."""
+    return jax.tree.map(
+        lambda g: jnp.where(flag, g, jnp.full_like(g, jnp.nan)), grads)
+
+
+__all__ = ["agreed_finite", "tree_select", "poison_unless"]

@@ -40,6 +40,7 @@ from repro.core.sharding import ShardingPolicy
 from repro.core.spatial_conv import SpatialPartitioning
 from repro.models import cosmoflow as cosmoflow_lib
 from repro.models import unet3d as unet_lib
+from repro.train import guard as guard_lib
 
 
 # ----------------------------------------------------------- conv nets ----
@@ -156,6 +157,7 @@ def _build_convnet_step(
     stage: str,  # "fwd" | "bwd" | "grad_comm" | "step"
     plan: Optional["plan_lib.ParallelPlan"] = None,
     precision=None,  # None -> the plan's policy (DESIGN.md §9)
+    guard: bool = False,  # psum-agreed skip of non-finite steps (§11)
 ):
     """Common builder for the train step and its phase probes.
 
@@ -178,6 +180,14 @@ def _build_convnet_step(
     the optimizer to unscale before clipping; non-finite fp16 grads skip
     the step inside the wrapped optimizer. The fp32 path is bit-identical
     to the pre-precision lowering.
+
+    ``guard`` (``step`` stage only, DESIGN.md §11) adds psum-agreed
+    non-finite loss/grad detection for EVERY precision: a bad step holds
+    params and optimizer state bitwise (fp16 routes the verdict through
+    its own §9 skip machine so the loss scale still backs off), and the
+    step returns a fourth output — 1.0 if the update applied, 0.0 if it
+    was skipped — for host-side telemetry. With finite values the
+    guarded step is value-transparent (bitwise-equal trajectory).
     """
     mode = _resolve_grad_comm(grad_comm)
     plan = resolve_convnet_plan(cfg, mesh, spatial_axes=spatial_axes,
@@ -272,11 +282,26 @@ def _build_convnet_step(
                     shards, bucket_plan, data_axes, grads)
             return loss, grads
 
+        applied = None
+        if guard:
+            # §11: one agreed verdict BEFORE the update. fp16 hands the
+            # loss-veto to its own skip machine (poisoned grads) so the
+            # scale still backs off; fp32/bf16 select after the update.
+            applied = guard_lib.agreed_finite(loss, grads, all_axes)
+            if policy.uses_scaling:
+                grads = guard_lib.poison_unless(applied, grads)
         if mode == "reduce_scatter":
             new_params, new_opt = grad_comm_lib.sharded_update(
                 optimizer, grads, opt_state, params, bucket_plan, data_axes)
         else:
             new_params, new_opt = optimizer.update(grads, opt_state, params)
+        if guard:
+            if not policy.uses_scaling:
+                new_params = guard_lib.tree_select(applied, new_params,
+                                                  params)
+                new_opt = guard_lib.tree_select(applied, new_opt, opt_state)
+            return (new_params, new_opt, loss,
+                    applied.astype(jnp.float32))
         return new_params, new_opt, loss
 
     dspec = data_axes if len(data_axes) > 1 else data_axes[0]
@@ -297,7 +322,8 @@ def _build_convnet_step(
         "fwd": P(),
         "bwd": (P(), P()),
         "grad_comm": (P(), P()),
-        "step": (P(), opt_spec, P()),
+        "step": ((P(), opt_spec, P(), P()) if guard
+                 else (P(), opt_spec, P())),
     }[stage]
     return compat.shard_map(
         local_step, mesh=mesh,
@@ -319,6 +345,7 @@ def make_convnet_train_step(
     grad_comm: Optional[str] = None,  # None -> flags grad_comm
     plan: Optional["plan_lib.ParallelPlan"] = None,  # DESIGN.md §5
     precision=None,  # None -> the plan's policy (DESIGN.md §9)
+    guard: bool = False,  # §11 non-finite step guard (+applied output)
     jit: bool = True,
 ):
     """Returns step(params, opt_state, x, y, rng) -> (params, opt, loss).
@@ -332,12 +359,14 @@ def make_convnet_train_step(
     ``precision`` selects the mixed-precision policy; ``params`` are
     always the fp32 masters (``make_convnet_opt_state`` must be built
     with the same policy so fp16 state carries the loss-scale machine).
+    ``guard=True`` returns ``(params, opt, loss, applied)`` — see
+    ``_build_convnet_step``.
     """
     mapped = _build_convnet_step(
         cfg, mesh, optimizer, spatial_axes=spatial_axes,
         data_axes=data_axes, global_batch=global_batch,
         use_pallas=use_pallas, overlap=overlap, grad_comm=grad_comm,
-        stage="step", plan=plan, precision=precision)
+        stage="step", plan=plan, precision=precision, guard=guard)
     if not jit:
         return mapped
     return jax.jit(mapped, donate_argnums=(0, 1))

@@ -107,8 +107,9 @@ def test_conv_config_json_restores_tuples():
 
 # ----------------------------------------------------- session lifecycle ----
 def test_session_matches_raw_assembly_path():
-    """Session.step is the same program as the raw kwarg assembly: the
-    trajectories agree bitwise on a single device."""
+    """Session.step is the same program as the raw kwarg assembly (guard
+    matched to the Session default): the trajectories agree bitwise on a
+    single device."""
     import jax
     import jax.numpy as jnp
 
@@ -127,12 +128,12 @@ def test_session_matches_raw_assembly_path():
 
     opt = Adam(lr=linear_decay(1e-3, 10))
     step = make_convnet_train_step(cfg, session.mesh, opt, global_batch=gb,
-                                   plan=session.plan)
+                                   plan=session.plan, guard=True)
     p = cosmoflow.init_params(jax.random.PRNGKey(0), cfg)
     st = make_convnet_opt_state(cfg, opt, p, mesh=session.mesh,
                                 plan=session.plan)
     for s in range(2):
-        p, st, loss_r = step(p, st, x, y, jnp.asarray(s, jnp.int32))
+        p, st, loss_r, _ = step(p, st, x, y, jnp.asarray(s, jnp.int32))
     assert float(loss_s) == float(loss_r)
     for k in p:
         assert np.array_equal(np.asarray(session.params[k]),
