@@ -30,6 +30,11 @@
                         overhead vs the unguarded PR-5 step (target
                         <=2%), and supervisor recovery time vs
                         checkpoint interval under injected device loss
+  io                    async input pipeline (DESIGN.md §12): sync vs
+                        prefetch vs sample-parallel samples/sec and
+                        per-step stall across spatial degrees on a
+                        bandwidth-throttled store, plus the bitwise
+                        sync-oracle parity row
 
 Output: ``name,us_per_call,derived`` CSV rows (derived = the figure's
 headline quantity). Run: ``PYTHONPATH=src python -m benchmarks.run
@@ -1047,6 +1052,150 @@ def bench_resilience(quick=False):
              f"restarts={r.restarts};resumes={r.resumes}")
 
 
+# ----------------------------------------------------------------- io -----
+_IO_BENCH_SCRIPT = """
+import dataclasses
+import tempfile
+import time
+import numpy as np
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro import configs
+from repro.core import compat
+from repro.data import pipeline, prefetch, store, synthetic
+from repro.models import cosmoflow
+from repro.optim.adam import Adam, constant
+from repro.train.train_step import make_convnet_train_step
+
+cfg = dataclasses.replace(configs.get_smoke_config('cosmoflow-512'),
+                          input_width={width})
+gb, W, steps = 2, cfg.input_width, {steps}
+THROTTLE = {throttle}  # MB/s: the emulated PFS bandwidth (store.py)
+d = tempfile.mkdtemp()
+cubes, targets = synthetic.make_cosmology_dataset(
+    8, W, channels=cfg.in_channels, seed=0)
+store.write_dataset(d, cubes, targets)
+bpe = 8 // gb
+spec = P('data', 'model', None, None, None)
+p0 = cosmoflow.init_params(jax.random.PRNGKey(4), cfg)
+seed = jnp.asarray(0, jnp.int32)
+
+def make_loader(kind, mesh, throttle):
+    s = store.HyperslabStore(d, throttle_mbps=throttle)
+    # cache=False: every epoch re-reads, the PFS-bound regime the
+    # paper's async pipeline targets (a warm cache would hide the I/O
+    # the bench is trying to measure)
+    cls = (pipeline.SampleParallelLoader if kind == 'sample_parallel'
+           else pipeline.SpatialParallelLoader)
+    ld = cls(s, mesh, spec, global_batch=gb, seed=0, cache=False)
+    if kind == 'prefetch':
+        ld = prefetch.PrefetchLoader(ld, depth=2)
+    return ld
+
+for R in (1, 2, 4):
+    mesh = compat.make_mesh((1, R), ('data', 'model'))
+    opt = Adam(lr=constant(1e-3))
+    # no donation: p0/st0 are reused across the three loader modes
+    step = jax.jit(make_convnet_train_step(cfg, mesh, opt, global_batch=gb,
+                                           jit=False))
+    st0 = opt.init(p0)
+    # two warmup steps: init-placed then committed-sharding compiles
+    warm = make_loader('sync', mesh, None)
+    xw, yw = warm.load_batch(np.arange(gb)); warm.close()
+    p, st, _ = step(p0, st0, xw, yw, seed)
+    jax.block_until_ready(step(p, st, xw, yw, seed)[2])
+    rows = {{}}
+    for kind in ('sync', 'prefetch', 'sample_parallel'):
+        ld = make_loader(kind, mesh, THROTTLE)
+        p, st = p0, st0
+        stall = 0.0
+        t0 = time.perf_counter()
+        for t in range(steps):
+            e, b = divmod(t, bpe)
+            order = ld.schedule_for_epoch(e)
+            tL = time.perf_counter()
+            x, y = ld.load_batch(order[b * gb:(b + 1) * gb])
+            stall += time.perf_counter() - tL  # step-stall: blocked on I/O
+            p, st, loss = step(p, st, x, y, seed)
+            jax.block_until_ready(loss)
+        total = time.perf_counter() - t0
+        per_rank_mib = ld.stats.pfs_bytes / max(R, 1) / 2 ** 20
+        occ = (f";queue_occ={{ld.queue_occupancy():.2f}}"
+               if kind == 'prefetch' else '')
+        ld.close()
+        rows[kind] = (total, stall)
+        rel = ('' if kind == 'sync' else
+               f"speedup={{rows['sync'][0] / total:.3f}}x_vs_sync;")
+        print(f"ROW,io.R{{R}}.{{kind}},{{total / steps * 1e6:.1f}},"
+              f"{{rel}}samples_per_s={{steps * gb / total:.2f}};"
+              f"stall_ms_per_step={{stall / steps * 1e3:.1f}};"
+              f"per_rank_pfs_MiB={{per_rank_mib:.2f}}{{occ}}")
+
+# bitwise parity (unthrottled, cached): the sync loader is the oracle —
+# same seed => identical schedules and bit-identical batch content
+mesh = compat.make_mesh((1, 2), ('data', 'model'))
+sync = make_loader('sync', mesh, None)
+pf = make_loader('prefetch', mesh, None)
+ok = True
+for t in range(2 * bpe):
+    e, b = divmod(t, bpe)
+    o1, o2 = sync.schedule_for_epoch(e), pf.schedule_for_epoch(e)
+    ok &= bool(np.array_equal(o1, o2))
+    xs, ys = sync.load_batch(o1[b * gb:(b + 1) * gb])
+    xp, yp = pf.load_batch(o2[b * gb:(b + 1) * gb])
+    ok &= bool(np.array_equal(np.asarray(xs), np.asarray(xp)))
+    ok &= bool(np.array_equal(np.asarray(ys), np.asarray(yp)))
+sync.close(); pf.close()
+print(f"ROW,io.parity.sync_vs_prefetch,0.0,"
+      f"bitwise={{ok}};epochs=2;oracle=sync")
+"""
+
+
+def bench_io(quick=False):
+    """Async input pipeline (DESIGN.md §12): sync vs prefetch vs
+    sample-parallel samples/sec and per-step stall across spatial
+    degrees {1, 2, 4}.
+
+    Subprocess with 4 forced host devices (the main process keeps the
+    real 1-device CPU). The store is throttled to an emulated PFS
+    bandwidth (reads on this box's page cache are otherwise free) with
+    the cache off — the PFS-bound regime of paper Fig. 3/5. The sync
+    rows pay read + compute serially; the prefetch rows hide the same
+    reads under the previous step's compute, so their stall column is
+    the RESIDUAL wait and the samples/sec gap is the overlap win (the
+    verify.sh io gate pins prefetch >= sync). The parity row asserts the
+    equivalence contract: same seed => bitwise-identical batches from
+    the sync oracle and the prefetch loader.
+    """
+    import os
+    import subprocess
+    import sys
+
+    script = _IO_BENCH_SCRIPT.format(width=16 if quick else 32,
+                                     steps=6 if quick else 10,
+                                     throttle=2.0 if quick else 4.0)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=4").strip()
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    try:
+        proc = subprocess.run([sys.executable, "-c", script], env=env,
+                              capture_output=True, text=True, timeout=900)
+    except subprocess.TimeoutExpired:
+        emit("io.error", 0.0, "subprocess_timeout:900s")
+        return
+    if proc.returncode != 0:
+        emit("io.error", 0.0,
+             f"subprocess_failed:{proc.stderr.strip()[-200:]}")
+        return
+    for line in proc.stdout.splitlines():
+        if line.startswith("ROW,"):
+            _, name, us, derived = line.split(",", 3)
+            emit(name, float(us), derived)
+
+
 BENCHES = {
     "fig4_strong_scaling": bench_fig4_strong_scaling,
     "fig7_unet_strong": bench_fig7_unet_strong,
@@ -1062,6 +1211,7 @@ BENCHES = {
     "memory": bench_memory,
     "api": bench_api,
     "resilience": bench_resilience,
+    "io": bench_io,
 }
 
 

@@ -210,4 +210,113 @@ EOF
 python -m pytest -q tests/test_resilience.py -x \
     -k "crash_mid_save or corruption or guard_skips"
 
+echo "== io gate =="
+# DESIGN.md §12: (a) prefetch-vs-sync batch sequences must be BITWISE
+# identical for the same seed (the sync loader is the equivalence
+# oracle), (b) on a bandwidth-throttled store the prefetch loader's
+# samples/sec must be >= the sync loader's (the overlap win; the bench
+# target is >=1.2x, the gate asserts parity-or-better so scheduler
+# jitter can't flake it), and (c) a persistent loader.read fault firing
+# inside the prefetch worker must fail the consumer's step loudly as
+# StoreReadError. Explicit exit, not assert (PYTHONOPTIMIZE-safe).
+python - <<'EOF'
+import dataclasses
+import sys
+import tempfile
+import time
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.core import compat, faults
+from repro.data import pipeline, prefetch, store, synthetic
+from repro.data.store import StoreReadError
+from repro.models import cosmoflow
+from repro.optim.adam import Adam, constant
+from repro.train.train_step import make_convnet_train_step
+
+cfg = dataclasses.replace(configs.get_smoke_config("cosmoflow-512"),
+                          input_width=16)
+gb, steps = 2, 6
+d = tempfile.mkdtemp()
+cubes, targets = synthetic.make_cosmology_dataset(
+    8, cfg.input_width, channels=cfg.in_channels, seed=0)
+store.write_dataset(d, cubes, targets)
+mesh = compat.make_mesh((1, 1), ("data", "model"))
+spec = P("data", "model", None, None, None)
+bpe = 8 // gb
+
+
+def loader(pf, throttle=None, cache=True):
+    ld = pipeline.SpatialParallelLoader(
+        store.HyperslabStore(d, throttle_mbps=throttle), mesh, spec,
+        global_batch=gb, seed=0, cache=cache)
+    return prefetch.PrefetchLoader(ld, depth=2) if pf else ld
+
+
+# (a) bitwise parity over two shuffled epochs
+sync, pf = loader(False), loader(True)
+for t in range(2 * bpe):
+    e, b = divmod(t, bpe)
+    o1, o2 = sync.schedule_for_epoch(e), pf.schedule_for_epoch(e)
+    if not np.array_equal(o1, o2):
+        sys.exit(f"io gate: schedules diverge at epoch {e}")
+    xs, ys = sync.load_batch(o1[b * gb:(b + 1) * gb])
+    xp, yp = pf.load_batch(o2[b * gb:(b + 1) * gb])
+    if not (np.array_equal(np.asarray(xs), np.asarray(xp))
+            and np.array_equal(np.asarray(ys), np.asarray(yp))):
+        sys.exit(f"io gate: batch {t} not bitwise sync-vs-prefetch")
+sync.close(); pf.close()
+print("io gate: prefetch-vs-sync batches bitwise over 2 epochs")
+
+# (b) throttled mini-e2e: prefetch samples/sec >= sync
+opt = Adam(lr=constant(1e-3))
+step = jax.jit(make_convnet_train_step(cfg, mesh, opt, global_batch=gb,
+                                       jit=False))
+p0 = cosmoflow.init_params(jax.random.PRNGKey(0), cfg)
+st0 = opt.init(p0)
+warm = loader(False)
+xw, yw = warm.load_batch(np.arange(gb)); warm.close()
+p, st, _ = step(p0, st0, xw, yw, np.int32(0))
+jax.block_until_ready(step(p, st, xw, yw, np.int32(0))[2])
+total = {}
+for kind in (False, True):
+    ld = loader(kind, throttle=2.0, cache=False)
+    p, st = p0, st0
+    t0 = time.perf_counter()
+    for t in range(steps):
+        e, b = divmod(t, bpe)
+        order = ld.schedule_for_epoch(e)
+        x, y = ld.load_batch(order[b * gb:(b + 1) * gb])
+        p, st, loss = step(p, st, x, y, np.int32(t))
+        jax.block_until_ready(loss)
+    total[kind] = time.perf_counter() - t0
+    ld.close()
+if total[True] > total[False]:
+    sys.exit(f"io gate: prefetch slower than sync on the throttled store "
+             f"({total[True]:.2f}s vs {total[False]:.2f}s)")
+print(f"io gate: prefetch {total[False] / total[True]:.2f}x vs sync "
+      f"(throttled store; bench target >=1.2x)")
+
+# (c) persistent worker-thread fault -> StoreReadError on the consumer
+pf = loader(True, cache=False)
+with faults.active(faults.FaultSpec("loader.read", probability=1.0)):
+    order = pf.epoch_schedule()
+    try:
+        pf.load_batch(order[:gb])
+    except StoreReadError as e:
+        print(f"io gate: worker fault surfaced loudly: {e}")
+    else:
+        sys.exit("io gate: persistent loader.read fault did NOT surface "
+                 "as StoreReadError on the consumer")
+pf.close()
+print("io gate OK")
+EOF
+
+# determinism + supervisor loader-mode bitwise resume unit contracts
+python -m pytest -q tests/test_io_pipeline.py -x \
+    -k "bitwise or deterministic or surfaces_on_consumer"
+
 echo "verify: OK"

@@ -84,6 +84,10 @@ class RunConfig:
     guard: bool = True  # psum-agreed skip of non-finite steps
     # --- data source: a HyperslabStore root, or None for synthetic ---
     data_dir: Optional[str] = None
+    # --- input pipeline (DESIGN.md §12): prefetch queue depth for
+    # Session.make_loader; 0 = synchronous loader (the equivalence
+    # oracle), >=2 = double-buffered async reads + host->device place ---
+    prefetch: int = 2
 
     # ------------------------------------------------------ resolution ----
     def resolve_model(self) -> ConvNetConfig:
@@ -183,6 +187,12 @@ class RunConfig:
                 "warmup_steps",
                 f"{self.warmup_steps} outside [0, total_steps="
                 f"{self.total_steps})", "shorten the warmup")
+
+        if not isinstance(self.prefetch, int) or self.prefetch < 0:
+            raise RunConfigError(
+                "prefetch", f"queue depth must be an int >= 0, got "
+                f"{self.prefetch!r}",
+                "use 0 for the synchronous loader, >= 2 to double-buffer")
 
         if self.save_every is not None and self.checkpoint_dir is None:
             raise RunConfigError(

@@ -302,18 +302,42 @@ class Session:
         otherwise), ``loader_retries`` (transient store-read failures
         absorbed by backoff, summed over this Session's loaders), and
         ``resumes`` (checkpoint auto-resumes, set by the supervisor).
-        Reading ``skipped_steps`` syncs the lazy accumulator."""
+        Reading ``skipped_steps`` syncs the lazy accumulator.
+
+        §12 input-pipeline counters ride along, summed over this
+        Session's loaders: ``io_pfs_bytes`` (store bytes actually read),
+        ``io_cache_hit_ratio`` (fraction of loader bytes served from the
+        distributed cache), and — when any loader prefetches —
+        ``io_stall_s`` (residual time steps still blocked on a queued
+        batch) and ``io_queue_occupancy`` (mean prefetch-queue depth at
+        serve time; ~depth when the pipeline keeps up)."""
         skipped = (self._guarded_steps - float(self._applied_acc)
                    if self._guarded_steps else 0.0)
         scale = (float(self.opt_state.loss_scale)
                  if isinstance(self.opt_state, precision_lib.MPState)
                  else 1.0)
         retries = sum(ld.store.retries for ld in self._loaders)
-        return {"steps": float(self._t),
-                "skipped_steps": round(skipped),
-                "loss_scale": scale,
-                "loader_retries": float(retries),
-                "resumes": float(self.resumes)}
+        out = {"steps": float(self._t),
+               "skipped_steps": round(skipped),
+               "loss_scale": scale,
+               "loader_retries": float(retries),
+               "resumes": float(self.resumes)}
+        if self._loaders:
+            out["io_pfs_bytes"] = float(
+                sum(ld.stats.pfs_bytes for ld in self._loaders))
+            served = sum(
+                ld.stats.pfs_bytes + ld.stats.cache_bytes_local
+                + ld.stats.cache_bytes_redistributed for ld in self._loaders)
+            out["io_cache_hit_ratio"] = (
+                1.0 - out["io_pfs_bytes"] / served if served else 0.0)
+            async_loaders = [ld for ld in self._loaders
+                             if hasattr(ld, "queue_occupancy")]
+            if async_loaders:
+                out["io_stall_s"] = sum(ld.stall_s for ld in async_loaders)
+                out["io_queue_occupancy"] = (
+                    sum(ld.queue_occupancy() for ld in async_loaders)
+                    / len(async_loaders))
+        return out
 
     def describe(self) -> Report:
         """One report: the chosen plan, the modeled per-device peak
@@ -386,12 +410,22 @@ class Session:
 
     # ------------------------------------------------------------ data ----
     def make_loader(self, root: Optional[str] = None, *,
-                    num_samples: int = 16, seed: int = 0, cache: bool = True):
-        """A ``SpatialParallelLoader`` sharded for the plan's entry
-        stage. ``root`` (or ``config.data_dir``) names an existing
-        ``HyperslabStore``; with neither, a synthetic dataset of
-        ``num_samples`` volumes is written to a Session-owned temp dir."""
-        from repro.data import pipeline, store, synthetic
+                    num_samples: int = 16, seed: int = 0, cache: bool = True,
+                    prefetch: Optional[int] = None, halo_voxels: int = 0):
+        """A loader sharded for the plan's entry stage. ``root`` (or
+        ``config.data_dir``) names an existing ``HyperslabStore``; with
+        neither, a synthetic dataset of ``num_samples`` volumes is
+        written to a Session-owned temp dir.
+
+        ``prefetch`` (default ``config.prefetch``) selects the input
+        pipeline (DESIGN.md §12): 0 returns the synchronous
+        ``SpatialParallelLoader`` (the bitwise oracle); >= 1 wraps it in
+        a ``PrefetchLoader`` of that queue depth, whose worker overlaps
+        the next batch's store reads and host->device transfer with the
+        current step's compute. The surface is identical either way.
+        ``halo_voxels`` widens each shard's reads by that margin."""
+        from repro.data import pipeline, prefetch as prefetch_lib
+        from repro.data import store, synthetic
 
         root = root or self.config.data_dir
         if root is None:
@@ -418,8 +452,11 @@ class Session:
         loader = pipeline.SpatialParallelLoader(
             store.HyperslabStore(root), self.mesh, x_spec,
             global_batch=self.config.global_batch, seed=seed, cache=cache,
-            label_spec=label_spec)
-        self._loaders.append(loader)  # §11 telemetry: retry counters
+            label_spec=label_spec, halo_voxels=halo_voxels)
+        depth = self.config.prefetch if prefetch is None else prefetch
+        if depth:
+            loader = prefetch_lib.PrefetchLoader(loader, depth=depth)
+        self._loaders.append(loader)  # §11/§12 telemetry + close()
         return loader
 
     # ------------------------------------------------------ checkpoint ----
@@ -484,6 +521,11 @@ class Session:
 
     # ------------------------------------------------------- lifecycle ----
     def close(self) -> None:
+        """Drain every loader (prefetch workers stop before their store
+        goes away — §12) and drop Session-owned temp datasets."""
+        for ld in self._loaders:
+            ld.close()
+        self._loaders = []
         for tmp in self._tmpdirs:
             tmp.cleanup()
         self._tmpdirs = []

@@ -107,6 +107,31 @@ def _default_batch_fn(config: RunConfig) -> Callable[[int], Tuple]:
     return make
 
 
+def _loader_batch_fn(sess: Session, config: RunConfig) -> Callable[[int], Tuple]:
+    """Batches from the session's (possibly prefetching) loader over
+    ``config.data_dir``, as a pure function of ``t``: step ``t`` is
+    chunk ``t % bpe`` of the pure ``schedule_for_epoch(t // bpe)``
+    permutation, so a resumed run replays the exact batch sequence the
+    failed run saw — bitwise, sync or prefetch (DESIGN.md §12). Rebuilt
+    per session: the loader (and its worker threads) die with the
+    session on every restart."""
+    loader = sess.make_loader(config.data_dir)
+    gb = config.global_batch
+    bpe = loader.store.num_samples // gb  # batches per epoch
+    if bpe < 1:
+        raise RunConfigError(
+            "data_dir",
+            f"dataset has {loader.store.num_samples} samples < "
+            f"global_batch={gb}", "add samples or shrink the batch")
+
+    def make(t: int):
+        epoch, b = divmod(t, bpe)
+        order = loader.schedule_for_epoch(epoch)
+        return loader.load_batch(order[b * gb:(b + 1) * gb])
+
+    return make
+
+
 def degrade_config(config: RunConfig, available: int) -> RunConfig:
     """Feasible degrees for a shrunken device count: halve spatial until
     it fits ``available`` and still divides the volume above the §5
@@ -218,7 +243,9 @@ def run(config: RunConfig, steps: int, *,
 
     ``batch_fn(t)`` supplies the global batch for step ``t`` and MUST be
     a pure function of ``t`` for bitwise replay (the default synthetic
-    source is). ``save_every``/``keep_last`` default to the config's
+    source is; with ``config.data_dir`` set the default instead streams
+    the store through ``Session.make_loader`` — async per
+    ``config.prefetch`` — which is equally pure in ``t``). ``save_every``/``keep_last`` default to the config's
     policy (else every ``max(1, steps // 4)`` steps, keep 3).
     ``watchdog_timeout_s`` bounds one step's wall time — a ``comm.stall``
     beyond it is treated as a failure (each session's first TWO steps
@@ -239,7 +266,9 @@ def run(config: RunConfig, steps: int, *,
     # the Session must not ALSO auto-save: the supervisor owns the
     # retention root so intervals and GC stay consistent across resumes
     cfg_now = dataclasses.replace(config, save_every=None, keep_last=None)
-    batch_fn = batch_fn or _default_batch_fn(config)
+    loader_mode = batch_fn is None and config.data_dir is not None
+    if batch_fn is None and not loader_mode:
+        batch_fn = _default_batch_fn(config)
 
     report = SupervisorReport(
         steps=steps, losses=[float("nan")] * steps,
@@ -253,6 +282,8 @@ def run(config: RunConfig, steps: int, *,
         try:
             if sess is None:
                 sess = _start_session(cfg_now, root, report, verbose)
+                if loader_mode:
+                    batch_fn = _loader_batch_fn(sess, cfg_now)
                 prev_skipped = (sess._guarded_steps
                                 - float(sess._applied_acc))
                 # the first two steps pay jit compiles (the second traces

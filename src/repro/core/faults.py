@@ -41,6 +41,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import threading
 import time
 import zlib
 from typing import Dict, List, Optional, Tuple
@@ -129,6 +130,10 @@ class _Armed:
 
 _ARMED: Dict[str, List[_Armed]] = {}
 _CALLS: Dict[str, int] = {}
+# ``loader.read`` fires from prefetch worker threads (DESIGN.md §12);
+# the lock keeps call-indexed schedules exact under concurrency
+# (unsynchronized counters would make ``at_calls`` nondeterministic)
+_LOCK = threading.Lock()
 
 
 def configure(*specs: FaultSpec, seed: int = 0) -> None:
@@ -173,32 +178,33 @@ def fire(site: str, step: Optional[int] = None, **info) -> bool:
     Raises the site's failure (``loader.read``/``checkpoint.write``/
     ``device.loss``), sleeps (``comm.stall``), or returns True for
     condition sites the caller acts on (``grads.nonfinite``). Returns
-    False — at the cost of one dict lookup — when nothing is armed."""
+    False — at the cost of one dict lookup — when nothing is armed.
+    Thread-safe: worker-thread sites (``loader.read`` under a prefetch
+    loader) count calls under a lock so schedules stay exact."""
     armed = _ARMED.get(site)
     if not armed:
         return False
-    _CALLS[site] = _CALLS.get(site, 0) + 1
-    for a in armed:
-        if not a.should_fire(step):
-            continue
-        where = f" at {info}" if info else ""
-        at = f" (step {step})" if step is not None else ""
-        if site == "loader.read":
-            raise InjectedIOError(site, f"injected store read error{where}")
-        if site == "checkpoint.write":
-            raise InjectedCrash(
-                site, f"injected writer kill between leaf writes{where}")
-        if site == "device.loss":
-            n = a.spec.available
-            detail = (f"{n} devices remain" if n is not None
-                      else "transient, same count on resume")
-            raise DeviceLost(site, f"injected device loss{at}: {detail}",
-                             available=n)
-        if site == "comm.stall":
-            time.sleep(a.spec.stall_s)
-            return True
-        return True  # grads.nonfinite: the caller poisons the batch
-    return False
+    with _LOCK:
+        _CALLS[site] = _CALLS.get(site, 0) + 1
+        hit = next((a for a in armed if a.should_fire(step)), None)
+    if hit is None:
+        return False
+    where = f" at {info}" if info else ""
+    at = f" (step {step})" if step is not None else ""
+    if site == "loader.read":
+        raise InjectedIOError(site, f"injected store read error{where}")
+    if site == "checkpoint.write":
+        raise InjectedCrash(
+            site, f"injected writer kill between leaf writes{where}")
+    if site == "device.loss":
+        n = hit.spec.available
+        detail = (f"{n} devices remain" if n is not None
+                  else "transient, same count on resume")
+        raise DeviceLost(site, f"injected device loss{at}: {detail}",
+                         available=n)
+    if site == "comm.stall":
+        time.sleep(hit.spec.stall_s)
+    return True  # comm.stall done; grads.nonfinite: caller poisons batch
 
 
 __all__ = [

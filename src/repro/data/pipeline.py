@@ -8,22 +8,34 @@ Key ideas reproduced:
     spatial partitioning instead of being capped by the mini-batch size.
  2. *Distributed in-memory cache*: epoch 0 populates a (rank -> hyperslab)
     cache; epochs 1+ never touch the store. An owner map records which
-    logical rank cached which hyperslab.
+    logical rank cached which hyperslab, so a cache hit served to a
+    DIFFERENT rank than its owner is counted as redistribution traffic
+    (the shuffle cost the paper's distributed cache pays).
  3. *Shuffle schedule*: before each epoch a permutation maps samples to
-    iterations; hyperslab redistribution traffic (cache hits served by a
-    different rank than the consumer) is counted so the I/O benchmark can
-    report shuffle traffic vs PFS traffic.
+    iterations. ``schedule_for_epoch(e)`` is a pure function of
+    ``(seed, e)`` — two loaders with the same seed produce identical
+    schedules in any call order, which is what lets a supervisor resume
+    mid-epoch and replay the exact batch sequence (DESIGN.md §12).
+ 4. *Halo margin reads* (``halo_voxels=``): each shard may read its
+    hyperslab expanded by a voxel margin on partitioned spatial dims, so
+    the bytes the first conv's halo exchange will request are already in
+    the shard's cache. Reads stay hyperslab-exact: the served array is
+    always the exact requested slab; only the *read* (and the cache
+    entry, and the PFS byte count) covers the margin.
 
-A "sample-parallel" baseline loader (one rank reads the whole sample —
-the pre-paper state of practice) is provided for the Fig. 5 comparison.
+The loader is thread-safe: a ``PrefetchLoader`` (``data/prefetch.py``)
+calls ``load_batch`` from worker threads, so cache and counter mutations
+take an internal lock. A "sample-parallel" baseline loader (one rank
+reads the whole sample — the pre-paper state of practice) is provided
+for the Fig. 5 comparison.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Dict, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -35,10 +47,18 @@ class IOStats:
     pfs_bytes: int = 0
     cache_bytes_local: int = 0
     cache_bytes_redistributed: int = 0
+    label_fetches: int = 0  # store.target() reads (not served by cache)
 
     def reset(self):
         self.pfs_bytes = self.cache_bytes_local = 0
         self.cache_bytes_redistributed = 0
+        self.label_fetches = 0
+
+    def cache_hit_ratio(self) -> float:
+        """Fraction of loader bytes served from the distributed cache."""
+        hit = self.cache_bytes_local + self.cache_bytes_redistributed
+        total = hit + self.pfs_bytes
+        return hit / total if total else 0.0
 
 
 class SpatialParallelLoader:
@@ -54,6 +74,7 @@ class SpatialParallelLoader:
         seed: int = 0,
         cache: bool = True,
         label_spec: Optional[P] = None,
+        halo_voxels: int = 0,
     ):
         self.store = store
         self.mesh = mesh
@@ -62,66 +83,150 @@ class SpatialParallelLoader:
             NamedSharding(mesh, label_spec) if label_spec is not None else None
         )
         self.global_batch = global_batch
-        self.rng = np.random.default_rng(seed)
+        self.seed = seed
         self.cache_enabled = cache
-        # cache[(sample, slab)] = (owner_rank, ndarray)
+        self.halo_voxels = halo_voxels
+        # cache[(sample, what, slab)] = (owner_rank, ndarray)
         self._cache: Dict[Tuple, Tuple[int, np.ndarray]] = {}
+        self._label_cache: Dict[Tuple[int, ...], jax.Array] = {}
         self.stats = IOStats()
         self.epoch = 0
+        self._lock = threading.Lock()
+        self._rank_of = {d: i for i, d in enumerate(self.mesh.devices.flat)}
 
-    def _fetch(self, sample: int, slab: Tuple[slice, ...], device_rank: int,
-               what: str = "x") -> np.ndarray:
-        key = (sample, what) + tuple((s.start, s.stop) for s in slab)
-        if self.cache_enabled and key in self._cache:
-            owner, arr = self._cache[key]
-            if owner == device_rank:
-                self.stats.cache_bytes_local += arr.nbytes
-            else:
-                self.stats.cache_bytes_redistributed += arr.nbytes
-            return arr
-        arr = self.store.read_hyperslab(sample, slab, what)
-        self.stats.pfs_bytes += arr.nbytes
-        if self.cache_enabled:
-            self._cache[key] = (device_rank, arr)
-        return arr
+    # ------------------------------------------------------------ sched ----
+    def schedule_for_epoch(self, epoch: int) -> np.ndarray:
+        """The epoch's sample permutation as a PURE function of
+        ``(seed, epoch)`` — identical across loader instances, across
+        sync/prefetch wrappers, and after a mid-run resume."""
+        rng = np.random.default_rng([self.seed, int(epoch)])
+        return rng.permutation(self.store.num_samples)
 
     def epoch_schedule(self) -> np.ndarray:
-        order = self.rng.permutation(self.store.num_samples)
+        order = self.schedule_for_epoch(self.epoch)
         self.epoch += 1
         return order
 
+    # ------------------------------------------------------------ fetch ----
+    def _expand(self, slab: Tuple[slice, ...], dims: Tuple[int, ...]):
+        """Widen bounded spatial slices by the halo margin (clamped)."""
+        if not self.halo_voxels:
+            return slab
+        out = []
+        for s, dim in zip(slab, dims):
+            lo = 0 if s.start is None else s.start
+            hi = dim if s.stop is None else s.stop
+            out.append(slice(max(lo - self.halo_voxels, 0),
+                             min(hi + self.halo_voxels, dim)))
+        return tuple(out) + slab[len(dims):]
+
+    def _fetch(self, sample: int, slab: Tuple[slice, ...], device_rank: int,
+               what: str = "x") -> np.ndarray:
+        """One hyperslab, from the distributed cache or the store. The
+        read (and cache entry) covers the ``halo_voxels``-expanded slab;
+        the returned array is always the exact requested slab."""
+        dims = self.store.sample_shape[:3]
+        wide = self._expand(slab, dims)
+        key = (sample, what) + tuple((s.start, s.stop) for s in wide)
+        with self._lock:
+            hit = self._cache.get(key) if self.cache_enabled else None
+        if hit is not None:
+            owner, arr = hit
+            with self._lock:
+                if owner == device_rank:
+                    self.stats.cache_bytes_local += arr.nbytes
+                else:
+                    self.stats.cache_bytes_redistributed += arr.nbytes
+        else:
+            arr = self.store.read_hyperslab(sample, wide, what)
+            with self._lock:
+                self.stats.pfs_bytes += arr.nbytes
+                if self.cache_enabled:
+                    self._cache[key] = (device_rank, arr)
+        if wide is slab:
+            return arr
+        inner = tuple(
+            slice((0 if s.start is None else s.start) - w.start,
+                  (0 if s.start is None else s.start) - w.start
+                  + ((dim if s.stop is None else s.stop)
+                     - (0 if s.start is None else s.start)))
+            for s, w, dim in zip(slab, wide, dims))
+        return arr[inner]
+
+    @staticmethod
+    def _slab_key(idx: Tuple[slice, ...], shape) -> Tuple:
+        """Concrete (start, stop) pairs for an index slab — normalizes
+        ``slice(None)`` vs ``slice(0, dim)`` so callback indices and
+        device-map indices always produce the same key."""
+        return tuple(s.indices(dim)[:2] for s, dim in zip(idx, shape))
+
+    def _rank_map(self, shape, sharding) -> Dict[Tuple, int]:
+        """index-slab -> logical rank, from the sharding's device map —
+        the rank that OWNS the slab a callback is filling (the cache
+        owner-rank fix: rank 0 no longer claims every hyperslab)."""
+        out = {}
+        for dev, idx in sharding.addressable_devices_indices_map(
+                tuple(shape)).items():
+            out[self._slab_key(idx, shape)] = self._rank_of[dev]
+        return out
+
+    def _vector_labels(self, sample_ids: np.ndarray) -> jax.Array:
+        """Vector regression targets for a batch, cached as the placed
+        device array — ``store.target`` is only re-read (and the batch
+        only re-``device_put``) on a cache miss."""
+        key = tuple(int(s) for s in sample_ids)
+        if self.cache_enabled:
+            with self._lock:
+                hit = self._label_cache.get(key)
+            if hit is not None:
+                return hit
+        tg = np.stack([self.store.target(int(s)) for s in sample_ids])
+        with self._lock:
+            self.stats.label_fetches += len(key)
+        y = jax.device_put(
+            tg, NamedSharding(self.mesh, P(self.sharding.spec[0])))
+        if self.cache_enabled:
+            with self._lock:
+                self._label_cache[key] = y
+        return y
+
+    # ------------------------------------------------------------ batch ----
     def load_batch(self, sample_ids: np.ndarray):
         """Build the sharded (N, D, H, W, C) global batch for these samples."""
         shape = (len(sample_ids),) + self.store.sample_shape
-        dev_list = list(self.mesh.devices.flat)
-        dev_rank = {d: i for i, d in enumerate(dev_list)}
+        ranks = self._rank_map(shape, self.sharding)
 
         def cb(idx: Tuple[slice, ...]) -> np.ndarray:
             # idx[0] selects samples; idx[1:4] is the spatial hyperslab.
-            ns = idx[0]
-            samples = sample_ids[ns]
+            rank = ranks[self._slab_key(idx, shape)]
+            samples = sample_ids[idx[0]]
             slab = tuple(idx[1:])
-            parts = [self._fetch(int(s), slab[:-1] + (slice(None),), 0)
+            parts = [self._fetch(int(s), slab[:-1] + (slice(None),), rank)
                      for s in samples]
             return np.stack(parts, axis=0)
 
         x = jax.make_array_from_callback(shape, self.sharding, cb)
         if self.store.label_kind == "voxel" and self.label_sharding:
             lshape = (len(sample_ids),) + self.store.sample_shape[:-1]
+            lranks = self._rank_map(lshape, self.label_sharding)
 
             def cb_y(idx):
+                rank = lranks[self._slab_key(idx, lshape)]
                 samples = sample_ids[idx[0]]
                 slab = tuple(idx[1:])
-                parts = [self._fetch(int(s), slab, 0, what="y")
+                parts = [self._fetch(int(s), slab, rank, what="y")
                          for s in samples]
                 return np.stack(parts, axis=0)
 
-            y = jax.make_array_from_callback(lshape, self.label_sharding, cb_y)
+            y = jax.make_array_from_callback(lshape, self.label_sharding,
+                                             cb_y)
         else:
-            tg = np.stack([self.store.target(int(s)) for s in sample_ids])
-            y = jax.device_put(
-                tg, NamedSharding(self.mesh, P(self.sharding.spec[0])))
+            y = self._vector_labels(sample_ids)
         return x, y
+
+    def close(self) -> None:
+        """Sync loaders hold no threads; kept so every loader drains the
+        same way (``PrefetchLoader.close`` is the real one)."""
 
 
 class SampleParallelLoader(SpatialParallelLoader):
@@ -130,23 +235,26 @@ class SampleParallelLoader(SpatialParallelLoader):
     parallelism. Used only by the I/O benchmark."""
 
     def load_batch(self, sample_ids: np.ndarray):
-        shape = (len(sample_ids),) + self.store.sample_shape
         full = []
         for s in sample_ids:
             key = (int(s), "x", "full")
-            if self.cache_enabled and key in self._cache:
-                _, arr = self._cache[key]
-                self.stats.cache_bytes_local += arr.nbytes
+            with self._lock:
+                hit = self._cache.get(key) if self.cache_enabled else None
+            if hit is not None:
+                arr = hit[1]
+                with self._lock:
+                    self.stats.cache_bytes_local += arr.nbytes
             else:
                 arr = self.store.read_full(int(s))
-                self.stats.pfs_bytes += arr.nbytes
-                if self.cache_enabled:
-                    self._cache[key] = (0, arr)
+                with self._lock:
+                    self.stats.pfs_bytes += arr.nbytes
+                    if self.cache_enabled:
+                        self._cache[key] = (0, arr)
             full.append(arr)
         batch = np.stack(full)
         # the scatter to the spatial sharding = pure redistribution traffic
-        self.stats.cache_bytes_redistributed += batch.nbytes
+        with self._lock:
+            self.stats.cache_bytes_redistributed += batch.nbytes
         x = jax.device_put(batch, self.sharding)
-        tg = np.stack([self.store.target(int(s)) for s in sample_ids])
-        y = jax.device_put(tg, NamedSharding(self.mesh, P(self.sharding.spec[0])))
+        y = self._vector_labels(sample_ids)
         return x, y

@@ -46,8 +46,16 @@ class StoreReadError(IOError):
 
 
 class HyperslabStore:
-    def __init__(self, root: str):
+    """``throttle_mbps`` emulates a bandwidth-limited PFS (the paper's
+    regime — local page cache makes reads unrealistically free): each
+    hyperslab read sleeps ``nbytes / bandwidth``. The sleep releases the
+    GIL, so a prefetching loader can hide it under device compute exactly
+    the way a real PFS wait is hidden. ``None`` (default) reads at disk
+    speed; benches opt in, production paths never set it."""
+
+    def __init__(self, root: str, throttle_mbps: Optional[float] = None):
         self.root = root
+        self.throttle_mbps = throttle_mbps
         self.bytes_read = 0
         self.reads = 0
         self.retries = 0
@@ -92,6 +100,8 @@ class HyperslabStore:
             path, lambda: np.array(np.load(path, mmap_mode="r")[slices]))
         self.bytes_read += out.nbytes
         self.reads += 1
+        if self.throttle_mbps:
+            time.sleep(out.nbytes / (self.throttle_mbps * 1e6))
         return out
 
     def read_full(self, i: int, what: str = "x") -> np.ndarray:
