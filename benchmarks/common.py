@@ -1,0 +1,97 @@
+"""Shared benchmark plumbing.
+
+Every e2e bench on this oversubscribed 2-core box fights the same
+enemy: machine drift. The cure is the same everywhere — time all cells
+in interleaved rounds so a load spike hits every cell equally, then
+take a trimmed mean — so the helper lives here once instead of being
+re-derived per bench (it used to be copy-pasted across the api,
+resilience, grad_comm and conv_overlap benches).
+
+Two trims, both deliberate:
+
+- ``trim="ends"`` (default): drop the top and bottom fifth, mean the
+  core. Right for paired overhead measurements (guarded vs unguarded,
+  session vs raw) where the headline is a ratio of two means and both
+  tails are noise.
+- ``trim="best"``: keep only the best third. Load spikes on a shared
+  box are one-sided (nothing ever runs *faster* than the quiet-machine
+  time), so the best third is the least-contended estimate — right for
+  absolute step times compared across configurations.
+
+``run_rows_subprocess`` is the other shared pattern: multi-device
+benches fork a child with ``--xla_force_host_platform_device_count``
+(the parent keeps the real 1-device CPU backend) and the child reports
+``ROW,name,us,derived`` lines that the parent forwards to ``emit``.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import time
+from typing import Callable, Dict, List
+
+
+def trimmed_mean_us(samples: List[float], *, trim: str = "ends") -> float:
+    """Trimmed mean of per-call seconds, in microseconds."""
+    v = sorted(samples)
+    if trim == "best":
+        k = max(len(v) // 3, 1)  # best third: load spikes are one-sided
+        return sum(v[:k]) / k * 1e6
+    k = max(len(v) // 5, 1)
+    core = v[k:-k] or v
+    return sum(core) / len(core) * 1e6
+
+
+def interleaved_trimmed(calls: Dict[str, Callable[[], object]],
+                        rounds: int, *, trim: str = "ends",
+                        warmups: int = 1) -> Dict[str, float]:
+    """Time all calls in interleaved rounds -> {name: trimmed-mean us}.
+
+    Each call must block until its work is done (wrap in
+    ``jax.block_until_ready``). ``warmups`` un-timed calls per cell
+    absorb jit compilation (use 2 when donation means the second call
+    compiles a differently-placed variant).
+    """
+    for c in calls.values():
+        for _ in range(warmups):
+            c()
+    samples: Dict[str, List[float]] = {k: [] for k in calls}
+    for _ in range(rounds):
+        for k, c in calls.items():
+            t0 = time.perf_counter()
+            c()
+            samples[k].append(time.perf_counter() - t0)
+    return {k: trimmed_mean_us(v, trim=trim) for k, v in samples.items()}
+
+
+def run_rows_subprocess(script: str, emit: Callable[[str, float, str], None],
+                        *, errname: str, devices: int = 4,
+                        timeout: int = 900) -> None:
+    """Run ``script`` in a child python with ``devices`` forced host
+    devices and forward its ``ROW,name,us,derived`` stdout lines to
+    ``emit``. Failures become a single ``{errname}.error`` row instead
+    of killing the whole bench run. The child's PYTHONPATH gets both
+    ``src`` and the repo root (so scripts can import this module)."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={devices}").strip()
+    env["PYTHONPATH"] = (os.path.join(root, "src") + os.pathsep + root
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    try:
+        proc = subprocess.run([sys.executable, "-c", script], env=env,
+                              capture_output=True, text=True,
+                              timeout=timeout)
+    except subprocess.TimeoutExpired:
+        emit(f"{errname}.error", 0.0, f"subprocess_timeout:{timeout}s")
+        return
+    if proc.returncode != 0:
+        emit(f"{errname}.error", 0.0,
+             f"subprocess_failed:{proc.stderr.strip()[-200:]}")
+        return
+    for line in proc.stdout.splitlines():
+        if line.startswith("ROW,"):
+            _, name, us, derived = line.split(",", 3)
+            emit(name, float(us), derived)

@@ -35,6 +35,12 @@
                         per-step stall across spatial degrees on a
                         bandwidth-throttled store, plus the bitwise
                         sync-oracle parity row
+  pipeline              pipeline parallelism (DESIGN.md §13): 1F1B vs
+                        the sequential GPipe-naive oracle vs
+                        no-pipeline e2e step on 2 stage groups, with
+                        emulated inter-group link latency, bitwise/fp
+                        parity rows, and the planner's paper-scale
+                        cost + memory-budget rows
 
 Output: ``name,us_per_call,derived`` CSV rows (derived = the figure's
 headline quantity). Run: ``PYTHONPATH=src python -m benchmarks.run
@@ -52,6 +58,11 @@ import jax.numpy as jnp
 
 from repro.core import compat
 import numpy as np
+
+try:  # python -m benchmarks.run (namespace package)
+    from benchmarks.common import interleaved_trimmed, run_rows_subprocess
+except ImportError:  # python benchmarks/run.py
+    from common import interleaved_trimmed, run_rows_subprocess
 
 ROWS = []
 
@@ -432,32 +443,9 @@ def bench_conv_overlap(quick=False):
     comm-independent interior conv — is asserted by the jaxpr tests and
     realized on real ICI/NVLink fabrics.
     """
-    import os
-    import subprocess
-    import sys
-
     script = _OVERLAP_BENCH_SCRIPT.format(reps=3 if quick else 6,
                                           conv_w=16 if quick else 32)
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
-                        + " --xla_force_host_platform_device_count=4").strip()
-    src = os.path.join(os.path.dirname(os.path.dirname(
-        os.path.abspath(__file__))), "src")
-    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
-    try:
-        proc = subprocess.run([sys.executable, "-c", script], env=env,
-                              capture_output=True, text=True, timeout=900)
-    except subprocess.TimeoutExpired:
-        emit("conv_overlap.error", 0.0, "subprocess_timeout:900s")
-        return
-    if proc.returncode != 0:
-        emit("conv_overlap.error", 0.0,
-             f"subprocess_failed:{proc.stderr.strip()[-200:]}")
-        return
-    for line in proc.stdout.splitlines():
-        if line.startswith("ROW,"):
-            _, name, us, derived = line.split(",", 3)
-            emit(name, float(us), derived)
+    run_rows_subprocess(script, emit, errname="conv_overlap")
 
 
 # --------------------------------------------------------- grad comm -----
@@ -600,32 +588,9 @@ def bench_grad_comm(quick=False):
     predicted serialized-vs-overlapped grad-comm gap and the ZeRO-1
     optimizer-state memory accounting.
     """
-    import os
-    import subprocess
-    import sys
-
     script = _GRAD_COMM_BENCH_SCRIPT.format(reps=8 if quick else 16,
                                             layers=48 if quick else 96)
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
-                        + " --xla_force_host_platform_device_count=4").strip()
-    src = os.path.join(os.path.dirname(os.path.dirname(
-        os.path.abspath(__file__))), "src")
-    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
-    try:
-        proc = subprocess.run([sys.executable, "-c", script], env=env,
-                              capture_output=True, text=True, timeout=900)
-    except subprocess.TimeoutExpired:
-        emit("grad_comm.error", 0.0, "subprocess_timeout:900s")
-        return
-    if proc.returncode != 0:
-        emit("grad_comm.error", 0.0,
-             f"subprocess_failed:{proc.stderr.strip()[-200:]}")
-        return
-    for line in proc.stdout.splitlines():
-        if line.startswith("ROW,"):
-            _, name, us, derived = line.split(",", 3)
-            emit(name, float(us), derived)
+    run_rows_subprocess(script, emit, errname="grad_comm")
 
     # perf-model predictions + ZeRO-1 optimizer-state accounting (analytic)
     from repro import configs
@@ -740,32 +705,9 @@ def bench_plan(quick=False):
     spatial x 16-way data) is emitted analytically from the main process,
     with the gate invariant: chosen cost <= fixed-degree cost.
     """
-    import os
-    import subprocess
-    import sys
-
     script = _PLAN_BENCH_SCRIPT.format(reps=6 if quick else 12,
                                        micro_w=16 if quick else 24)
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
-                        + " --xla_force_host_platform_device_count=4").strip()
-    src = os.path.join(os.path.dirname(os.path.dirname(
-        os.path.abspath(__file__))), "src")
-    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
-    try:
-        proc = subprocess.run([sys.executable, "-c", script], env=env,
-                              capture_output=True, text=True, timeout=900)
-    except subprocess.TimeoutExpired:
-        emit("plan.error", 0.0, "subprocess_timeout:900s")
-        return
-    if proc.returncode != 0:
-        emit("plan.error", 0.0,
-             f"subprocess_failed:{proc.stderr.strip()[-200:]}")
-        return
-    for line in proc.stdout.splitlines():
-        if line.startswith("ROW,"):
-            _, name, us, derived = line.split(",", 3)
-            emit(name, float(us), derived)
+    run_rows_subprocess(script, emit, errname="plan")
 
     # planner choice at paper scale (analytic; the verify.sh plan gate).
     # baseline: the legacy fixed-degree plan priced directly, NOT drawn
@@ -949,23 +891,9 @@ def bench_api(quick=False):
         "session": lambda: jax.block_until_ready(session.step(x, y)),
         "raw": raw_call,
     }
-    for c in calls.values():
-        c()  # warm/compile
     rounds = 10 if quick else 30
-    samples = {k: [] for k in calls}
-    for _ in range(rounds):
-        for k, c in calls.items():
-            t0 = time.perf_counter()
-            c()
-            samples[k].append(time.perf_counter() - t0)
-
-    def trimmed(v):
-        v = sorted(v)
-        k = max(len(v) // 5, 1)
-        core = v[k:-k] or v
-        return sum(core) / len(core) * 1e6
-
-    raw_us, sess_us = trimmed(samples["raw"]), trimmed(samples["session"])
+    us = interleaved_trimmed(calls, rounds)
+    raw_us, sess_us = us["raw"], us["session"]
     emit("api.step.raw", raw_us, f"rounds={rounds};W={W}")
     emit("api.step.session", sess_us,
          f"overhead={100 * (sess_us - raw_us) / raw_us:+.2f}%_vs_raw;"
@@ -1011,23 +939,10 @@ def bench_resilience(quick=False):
     }
     calls = {k: (lambda s=s: jax.block_until_ready(s.step(x, y)))
              for k, s in sessions.items()}
-    for c in calls.values():
-        c(); c()  # both compiles (init-placed and committed params)
     rounds = 10 if quick else 30
-    samples = {k: [] for k in calls}
-    for _ in range(rounds):
-        for k, c in calls.items():
-            t0 = time.perf_counter()
-            c()
-            samples[k].append(time.perf_counter() - t0)
-
-    def trimmed(v):
-        v = sorted(v)
-        k = max(len(v) // 5, 1)
-        core = v[k:-k] or v
-        return sum(core) / len(core) * 1e6
-
-    un_us, gd_us = trimmed(samples["unguarded"]), trimmed(samples["guarded"])
+    # warmups=2: both compiles (init-placed and committed params)
+    us = interleaved_trimmed(calls, rounds, warmups=2)
+    un_us, gd_us = us["unguarded"], us["guarded"]
     emit("resilience.step.unguarded", un_us, f"rounds={rounds};W={W}")
     emit("resilience.step.guarded", gd_us,
          f"overhead={100 * (gd_us - un_us) / un_us:+.2f}%_vs_unguarded;"
@@ -1167,33 +1082,182 @@ def bench_io(quick=False):
     equivalence contract: same seed => bitwise-identical batches from
     the sync oracle and the prefetch loader.
     """
-    import os
-    import subprocess
-    import sys
-
     script = _IO_BENCH_SCRIPT.format(width=16 if quick else 32,
                                      steps=6 if quick else 10,
                                      throttle=2.0 if quick else 4.0)
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
-                        + " --xla_force_host_platform_device_count=4").strip()
-    src = os.path.join(os.path.dirname(os.path.dirname(
-        os.path.abspath(__file__))), "src")
-    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
-    try:
-        proc = subprocess.run([sys.executable, "-c", script], env=env,
-                              capture_output=True, text=True, timeout=900)
-    except subprocess.TimeoutExpired:
-        emit("io.error", 0.0, "subprocess_timeout:900s")
-        return
-    if proc.returncode != 0:
-        emit("io.error", 0.0,
-             f"subprocess_failed:{proc.stderr.strip()[-200:]}")
-        return
-    for line in proc.stdout.splitlines():
-        if line.startswith("ROW,"):
-            _, name, us, derived = line.split(",", 3)
-            emit(name, float(us), derived)
+    run_rows_subprocess(script, emit, errname="io")
+
+
+_PIPELINE_BENCH_SCRIPT = """
+import dataclasses
+import jax
+import jax.numpy as jnp
+import numpy as np
+from repro import configs
+from repro.core import flags, plan as plan_lib
+from repro.launch import mesh as mesh_lib
+from repro.models import cosmoflow as cf
+from repro.optim.adam import Adam
+from repro.train import train_step as ts
+try:
+    from benchmarks.common import interleaved_trimmed
+except ImportError:
+    from common import interleaved_trimmed
+
+W, GB, M, ROUNDS = {width}, 16, 8, {rounds}
+# batchnorm off: per-micro-batch BN statistics are the one term the
+# equivalence contract excludes (DESIGN.md 13), so the parity row can
+# pin 1f1b-vs-no-pipeline at the bench's real micro-batch count
+cfg = dataclasses.replace(configs.get_smoke_config("cosmoflow-512"),
+                          input_width=W, conv_channels=(4, 8, 16),
+                          batchnorm=False)
+params = cf.init_params(jax.random.PRNGKey(0), cfg)
+kx, ky = jax.random.split(jax.random.PRNGKey(1))
+x = np.asarray(jax.random.normal(
+    kx, (GB,) + (W,) * 3 + (cfg.in_channels,)), np.float32)
+y = np.asarray(jax.random.normal(ky, (GB, cfg.out_dim)), np.float32)
+opt = Adam(lambda s: 1e-3)
+
+pipe = {{}}
+for sched in ("1f1b", "sequential"):
+    plan = plan_lib.pipelined_convnet_plan(
+        cfg, boundaries=(2,), micro_batches=M, schedule=sched,
+        data_degrees=(2,))
+    meshes = mesh_lib.make_pipeline_meshes(plan)
+    step = ts.make_pipeline_train_step(cfg, meshes, opt, plan=plan,
+                                       global_batch=GB, donate=False)
+    opts = ts.make_pipeline_opt_state(cfg, opt, params, plan=plan,
+                                      meshes=meshes)
+    pipe[sched] = (step, opts)
+mesh = mesh_lib.make_local_mesh(model=1, data=4)
+stepn = ts.make_convnet_train_step(
+    cfg, mesh, opt, spatial_axes=(None, None, None), data_axes=("data",),
+    global_batch=GB, grad_comm="overlap")
+
+# equivalence rows: one step each from identical params
+p0 = jax.tree.map(jnp.copy, params)
+o0 = ts.make_convnet_opt_state(cfg, opt, p0, grad_comm="overlap")
+pn, sn, loss_n = stepn(p0, o0, x, y, 0)
+r1 = pipe["1f1b"][0](params, pipe["1f1b"][1], x, y, 0)
+rs = pipe["sequential"][0](params, pipe["sequential"][1], x, y, 0)
+dloss = abs(float(r1[2]) - float(loss_n))
+print(f"ROW,pipeline.parity.1f1b_vs_nopipe,0.0,"
+      f"max_abs_loss_diff={{dloss:.3g}};tol=1e-5;micro_batches={{M}};"
+      f"ok={{dloss <= 1e-5}}")
+bit = float(r1[2]) == float(rs[2]) and all(
+    np.array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(r1[0]), jax.tree.leaves(rs[0])))
+print(f"ROW,pipeline.parity.1f1b_vs_sequential,0.0,"
+      f"bitwise={{bit}};micro_batches={{M}};oracle=sequential")
+
+def run_sched(sched):
+    step, opts = pipe[sched]
+    jax.block_until_ready(step(params, opts, x, y, 0))
+
+raw = {{}}
+def run_nopipe():
+    if "p" not in raw:
+        raw["p"] = jax.tree.map(jnp.copy, params)
+        raw["st"] = ts.make_convnet_opt_state(cfg, opt, raw["p"],
+                                              grad_comm="overlap")
+    p, st, loss = stepn(raw["p"], raw["st"], x, y, 0)
+    raw["p"], raw["st"] = p, st
+    jax.block_until_ready(loss)
+
+topo = f"micro_batches={{M}};stages=2;data_per_group=2"
+for lat_ms in (0, {lat_ms}):
+    flags.set_flags(pipeline_link_latency_s=lat_ms / 1e3)
+    calls = {{"1f1b": lambda: run_sched("1f1b"),
+              "sequential": lambda: run_sched("sequential")}}
+    if lat_ms == 0:
+        calls["no_pipeline"] = run_nopipe
+    t = interleaved_trimmed(calls, ROUNDS, trim="best")
+    tag = "cosmoflow" if lat_ms == 0 else f"link{{lat_ms}}ms"
+    rel = f"speedup={{t['sequential'] / t['1f1b']:.3f}}x_vs_sequential"
+    if lat_ms == 0:
+        # forced-host devices share one core: device compute serializes
+        # across groups and the cross-group device_put is a free memcpy,
+        # so the zero-latency rows bound scheduling overhead, not the
+        # overlap win the link rows measure
+        rel += (f";vs_no_pipeline={{t['no_pipeline'] / t['1f1b']:.3f}}x"
+                f";note=1-core_host_serializes_group_compute")
+    print(f"ROW,pipeline.step.{{tag}}.1f1b,{{t['1f1b']:.1f}},"
+          f"{{rel}};link_latency_ms={{lat_ms}};{{topo}}")
+    print(f"ROW,pipeline.step.{{tag}}.sequential,{{t['sequential']:.1f}},"
+          f"oracle=GPipe-naive_full_drain;link_latency_ms={{lat_ms}}")
+    if lat_ms == 0:
+        print(f"ROW,pipeline.step.{{tag}}.no_pipeline,"
+              f"{{t['no_pipeline']:.1f}},plan=data4;link_latency_ms=0")
+flags.set_flags(pipeline_link_latency_s=0.0)
+"""
+
+
+def bench_pipeline(quick=False):
+    """Pipeline parallelism (DESIGN.md §13): 1F1B vs the sequential
+    GPipe-naive oracle vs no-pipeline, measured e2e on 4 forced host
+    devices (2 stage groups x data 2), plus the planner's cost/capacity
+    rows at paper scale.
+
+    The zero-latency step rows are honest about this box: the forced
+    host devices share one core, so group compute serializes and both
+    schedules tie — they bound the dispatcher's scheduling overhead.
+    The ``link{N}ms`` rows emulate the inter-group fabric latency the
+    host topology lacks (``flags.pipeline_link_latency_s``, the same
+    move the io bench makes by throttling its store): 1F1B keeps two
+    micro-batches in flight per group so the crossing hides under
+    compute, while the sequential oracle drains every micro-batch
+    through both boundary crossings — the measured gap is the latency
+    each schedule exposes. Parity rows pin the equivalence contract
+    (1f1b == sequential bitwise; == no-pipeline to fp tolerance with
+    per-micro BN stats off). The model/planner rows carry the paper-
+    scale argument: predicted 1F1B-vs-sequential speedup at 512^3, the
+    joint argmin declining a pipeline priced above the best
+    non-pipelined candidate, and a memory budget only the pipelined
+    split fits — the capacity lever (micro-batching shrinks per-device
+    activations) that forces the choice."""
+    script = _PIPELINE_BENCH_SCRIPT.format(
+        width=16, rounds=4 if quick else 8, lat_ms=25)
+    run_rows_subprocess(script, emit, errname="pipeline")
+
+    from repro import configs
+    from repro.core import memory as memory_lib
+    from repro.core import plan as plan_lib
+    from repro.core.perf_model import V100
+
+    cfg = configs.get_config("cosmoflow-512")
+    gb, n_dev = 32, 8
+    kw = dict(data_degree=n_dev, global_batch=gb, grad_comm="overlap")
+    base = plan_lib.plan_convnet(cfg, V100, spatial_degree=1, **kw)
+    cands = {
+        sched: min(plan_lib.candidate_pipeline_plans(
+            cfg, V100, pipeline_degrees=(2,), micro_batch_options=(8,),
+            num_devices=n_dev, global_batch=gb, schedule=sched),
+            key=lambda p: p.cost)
+        for sched in ("1f1b", "sequential")}
+    b1 = cands["1f1b"]
+    emit("pipeline.model.cosmoflow512.1f1b", b1.cost * 1e6,
+         f"predicted_speedup="
+         f"{cands['sequential'].cost / b1.cost:.2f}x_vs_sequential;"
+         f"{b1.name};devices={n_dev};global_batch={gb}")
+
+    joint = plan_lib.plan_convnet(
+        cfg, V100, spatial_degree=1, pipeline_options=(2,),
+        micro_batch_options=(8,), **kw)
+    emit("pipeline.plan.guard", 0.0,
+         f"declines_overpriced_pipeline={joint.n_groups == 1};"
+         f"base_ms={base.cost * 1e3:.0f};"
+         f"best_pipe_ms={b1.cost * 1e3:.0f}")
+
+    peak_base = memory_lib.plan_peak_bytes(cfg, base, global_batch=gb)
+    chosen = plan_lib.plan_convnet(
+        cfg, V100, spatial_degree=1,
+        memory_budget_bytes=100 * 2 ** 30, pipeline_options=(2,),
+        micro_batch_options=(8,), **kw)
+    peak = memory_lib.plan_peak_bytes(cfg, chosen, global_batch=gb)
+    emit("pipeline.plan.budget100gib", chosen.cost * 1e6,
+         f"chosen={chosen.name};groups={chosen.n_groups};"
+         f"peak_gib={peak.total / 2 ** 30:.1f};"
+         f"no_pipeline_peak_gib={peak_base.total / 2 ** 30:.1f}")
 
 
 BENCHES = {
@@ -1212,6 +1276,7 @@ BENCHES = {
     "api": bench_api,
     "resilience": bench_resilience,
     "io": bench_io,
+    "pipeline": bench_pipeline,
 }
 
 

@@ -2,11 +2,74 @@
 # Per-PR verification: tier-1 tests + kernel perf smoke.
 #
 #   make verify            # or: bash scripts/verify.sh
+#   bash scripts/verify.sh pipeline         # just the §13 pipeline gate
 #   BENCH_OUT=BENCH_PR_N.json make verify   # also capture the bench rows
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+pipeline_gate() {
+    echo "== pipeline gate =="
+    # DESIGN.md §13: (a) the joint (data x spatial x pipeline) argmin
+    # must never return a pipelined plan priced above the best
+    # non-pipelined candidate (at a fixed device pool, pipelining adds a
+    # bubble to equal compute — it wins capacity, not modeled time), and
+    # (b) under a memory budget only the pipelined split fits, the
+    # planner must pick it and its modeled peak must fit. Explicit exit,
+    # not assert (PYTHONOPTIMIZE-safe).
+    python - <<'EOF'
+import sys
+
+from repro import configs
+from repro.core import memory, plan as plan_lib
+from repro.core.perf_model import V100
+
+cfg = configs.get_config("cosmoflow-512")
+kw = dict(spatial_degree=1, data_degree=8, global_batch=32,
+          grad_comm="overlap")
+base = plan_lib.plan_convnet(cfg, V100, **kw)
+cands = plan_lib.candidate_pipeline_plans(
+    cfg, V100, pipeline_degrees=(2,), micro_batch_options=(8,),
+    num_devices=8, global_batch=32)
+joint = plan_lib.plan_convnet(cfg, V100, pipeline_options=(2,),
+                              micro_batch_options=(8,), **kw)
+if min(c.cost for c in cands) <= base.cost:
+    sys.exit("pipeline gate: a pipelined candidate prices at or below "
+             "pure data parallelism on equal devices — the bubble term "
+             "vanished from the cost model")
+if joint.n_groups != 1 or joint.cost != base.cost:
+    sys.exit(f"pipeline gate: joint argmin picked {joint.name} "
+             f"({joint.cost * 1e3:.0f}ms) over the cheaper non-pipelined "
+             f"{base.name} ({base.cost * 1e3:.0f}ms)")
+budget = 100 * 2 ** 30
+chosen = plan_lib.plan_convnet(cfg, V100, memory_budget_bytes=budget,
+                               pipeline_options=(2,),
+                               micro_batch_options=(8,), **kw)
+peak = memory.plan_peak_bytes(cfg, chosen, global_batch=32)
+if chosen.n_groups < 2 or peak.total > budget:
+    sys.exit(f"pipeline gate: budget {budget / 2 ** 30:.0f}GiB should "
+             f"force a pipelined plan, got {chosen.name} at "
+             f"{peak.total / 2 ** 30:.1f}GiB")
+print(f"pipeline gate OK: joint argmin keeps {base.name} "
+      f"({base.cost * 1e3:.0f}ms vs pipelined "
+      f"{min(c.cost for c in cands) * 1e3:.0f}ms); "
+      f"{budget / 2 ** 30:.0f}GiB budget forces {chosen.name} "
+      f"({peak.total / 2 ** 30:.1f}GiB)")
+EOF
+
+    # 1F1B equivalence contract: bitwise vs the sequential oracle,
+    # fp-tolerance vs no-pipeline; multi-group runs go through the
+    # shared run_multidevice helper (forced host device count).
+    python -m pytest -q tests/test_pipeline.py -x \
+        -k "parity or bitwise or schedule_order or window"
+}
+
+if [ "${1:-}" = "pipeline" ]; then
+    pipeline_gate
+    echo "verify: OK (pipeline only)"
+    exit 0
+fi
 
 echo "== tier-1 pytest =="
 python -m pytest -x -q
@@ -318,5 +381,7 @@ EOF
 # determinism + supervisor loader-mode bitwise resume unit contracts
 python -m pytest -q tests/test_io_pipeline.py -x \
     -k "bitwise or deterministic or surfaces_on_consumer"
+
+pipeline_gate
 
 echo "verify: OK"

@@ -23,6 +23,16 @@ def add_session_args(ap) -> None:
                     help="data-parallel degree")
     ap.add_argument("--model", type=int, default=1,
                     help="spatial-parallel degree (mesh 'model' axis)")
+    ap.add_argument("--pipeline", type=int, default=1, metavar="P",
+                    help="pipeline-parallel degree (DESIGN.md §13): split "
+                         "the layer chain into P stages on disjoint device "
+                         "groups; --data stays the TOTAL data degree")
+    ap.add_argument("--micro-batches", type=int, default=4, metavar="M",
+                    help="micro-batches per step when --pipeline > 1")
+    ap.add_argument("--pipeline-schedule", default="1f1b",
+                    choices=("1f1b", "sequential"),
+                    help="1F1B interleaving, or the blocking GPipe-style "
+                         "oracle (equivalence baseline)")
     ap.add_argument("--plan", action="store_true",
                     help="let the cost model pick a per-stage parallelism "
                          "plan (DESIGN.md §5) instead of the fixed degree")
@@ -38,6 +48,10 @@ def add_session_args(ap) -> None:
     ap.add_argument("--grad-comm", default=None,
                     choices=("monolithic", "overlap", "reduce_scatter"),
                     help="gradient-reduction lowering (DESIGN.md §4)")
+    ap.add_argument("--grad-clip", type=float, default=None,
+                    metavar="NORM",
+                    help="global grad-norm clip (0 disables; pipelined "
+                         "runs need 0 — no cross-group global norm)")
     ap.add_argument("--ckpt", default=None,
                     help="checkpoint directory (final save; restore with "
                          "Session.restore)")
@@ -45,7 +59,9 @@ def add_session_args(ap) -> None:
 
 def config_from_args(base: RunConfig, args) -> RunConfig:
     """Apply parsed ``add_session_args`` flags over a preset config."""
-    over = {"data": args.data, "spatial": args.model}
+    over = {"data": args.data, "spatial": args.model,
+            "pipeline": args.pipeline, "micro_batches": args.micro_batches,
+            "pipeline_schedule": args.pipeline_schedule}
     if args.steps is not None:
         over["total_steps"] = args.steps
     if args.batch is not None:
@@ -58,6 +74,8 @@ def config_from_args(base: RunConfig, args) -> RunConfig:
         over["precision"] = args.precision
     if args.grad_comm:
         over["grad_comm"] = args.grad_comm
+    if args.grad_clip is not None:
+        over["grad_clip"] = args.grad_clip
     if args.ckpt:
         over["checkpoint_dir"] = args.ckpt
     return dataclasses.replace(base, **over)

@@ -63,6 +63,13 @@ class RunConfig:
     global_batch: int = 4
     data: int = 1
     spatial: int = 1
+    # --- pipeline axis (DESIGN.md §13): number of disjoint device groups.
+    # ``data`` stays the TOTAL data degree; pipeline=P splits it into P
+    # groups of data//P. micro_batches/pipeline_schedule only apply when
+    # pipeline > 1.
+    pipeline: int = 1
+    micro_batches: int = 4
+    pipeline_schedule: str = "1f1b"
     plan: Union[str, "plan_lib.ParallelPlan"] = "fixed"
     memory_budget_gib: Optional[float] = None
     precision: str = "auto"
@@ -152,6 +159,80 @@ class RunConfig:
                     f"local width {w // self.spatial} < {_MIN_LOCAL_WIDTH}",
                     f"reduce spatial to <= {w // _MIN_LOCAL_WIDTH}")
 
+        if not isinstance(self.pipeline, int) or self.pipeline < 1:
+            raise RunConfigError(
+                "pipeline", f"group count must be an int >= 1, got "
+                f"{self.pipeline!r}",
+                "pass 1 (no pipelining) or the number of stage groups")
+        if self.pipeline > 1:
+            n_layers = (plan_lib.cosmoflow_n_layers(cfg)
+                        if cfg.arch == "cosmoflow"
+                        else plan_lib.unet_n_layers(cfg))
+            if self.pipeline > n_layers:
+                raise RunConfigError(
+                    "pipeline",
+                    f"{self.pipeline} groups exceed {cfg.name}'s "
+                    f"{n_layers} plan layers",
+                    f"use pipeline <= {n_layers}")
+            if self.spatial > 1:
+                raise RunConfigError(
+                    "pipeline",
+                    f"pipeline={self.pipeline} with spatial={self.spatial}: "
+                    "pipelined plans shard only the batch within each "
+                    "device group",
+                    "set spatial=1 (or pipeline=1)")
+            if self.data % self.pipeline:
+                raise RunConfigError(
+                    "data",
+                    f"data={self.data} does not split into "
+                    f"pipeline={self.pipeline} equal device groups",
+                    f"use a multiple of {self.pipeline} "
+                    f"(e.g. {self.pipeline * max(1, self.data // self.pipeline)})")
+            if self.grad_comm == "reduce_scatter":
+                raise RunConfigError(
+                    "grad_comm",
+                    "'reduce_scatter' (ZeRO-1) shards the full param tree "
+                    "over one mesh and does not compose with pipeline "
+                    "groups",
+                    "use grad_comm='overlap' or 'monolithic'")
+            if self.precision == "fp16":
+                raise RunConfigError(
+                    "precision",
+                    "fp16 loss scaling is not supported under pipeline "
+                    "groups",
+                    "use precision='bf16' or 'fp32'")
+            if self.grad_clip:
+                raise RunConfigError(
+                    "grad_clip",
+                    f"{self.grad_clip} needs the global grad norm across "
+                    "disjoint device groups",
+                    "set grad_clip=0 under pipelined runs")
+            if not isinstance(self.micro_batches, int) or \
+                    self.micro_batches < 1:
+                raise RunConfigError(
+                    "micro_batches", f"must be an int >= 1, got "
+                    f"{self.micro_batches!r}",
+                    "pass the micro-batch count (e.g. 4)")
+            if self.global_batch % self.micro_batches:
+                raise RunConfigError(
+                    "micro_batches",
+                    f"{self.micro_batches} does not divide "
+                    f"global_batch={self.global_batch}",
+                    "pick a divisor of the global batch")
+            group_data = self.data // self.pipeline
+            if (self.global_batch // self.micro_batches) % group_data:
+                raise RunConfigError(
+                    "micro_batches",
+                    f"micro-batch {self.global_batch // self.micro_batches}"
+                    f" does not divide over the per-group data degree "
+                    f"{group_data} (= data/pipeline)",
+                    "lower micro_batches or the data degree")
+            if self.pipeline_schedule not in plan_lib.PIPELINE_SCHEDULES:
+                raise RunConfigError(
+                    "pipeline_schedule",
+                    f"unknown schedule {self.pipeline_schedule!r}",
+                    f"choices: {', '.join(plan_lib.PIPELINE_SCHEDULES)}")
+
         if self.precision not in PRECISIONS:
             raise RunConfigError("precision",
                                  f"unknown policy {self.precision!r}",
@@ -226,7 +307,11 @@ class RunConfig:
                 f"{self.data * self.spatial}")
 
     def _validate_plan_degrees(self, plan: "plan_lib.ParallelPlan") -> None:
-        data_deg, spatial_deg = plan.data_degree, plan.spatial_degree
+        n_groups = plan.n_groups
+        # a pipelined plan's recorded degrees are PER GROUP; the config's
+        # ``data`` is the total across groups.
+        data_deg = plan.data_degree * n_groups
+        spatial_deg = plan.spatial_degree
         if data_deg != self.data or spatial_deg != self.spatial:
             raise RunConfigError(
                 "plan",
@@ -235,6 +320,21 @@ class RunConfig:
                 f"{self.data}x{self.spatial}",
                 f"set data={data_deg}, spatial={spatial_deg} (or rebuild "
                 f"the plan for this mesh)")
+        if n_groups != max(1, self.pipeline):
+            raise RunConfigError(
+                "pipeline",
+                f"plan {plan.name!r} has {n_groups} device group(s) but "
+                f"the config asks for pipeline={self.pipeline}",
+                f"set pipeline={n_groups} (or rebuild the plan)")
+        if n_groups > 1 and plan.pipeline.micro_batches != \
+                self.micro_batches:
+            raise RunConfigError(
+                "micro_batches",
+                f"plan {plan.name!r} records "
+                f"{plan.pipeline.micro_batches} micro-batches but the "
+                f"config asks for {self.micro_batches}",
+                f"set micro_batches={plan.pipeline.micro_batches} (or "
+                "rebuild the plan)")
 
     # --------------------------------------------------- serialization ----
     def to_json(self) -> Dict[str, Any]:
@@ -268,6 +368,11 @@ def plan_to_json(plan: "plan_lib.ParallelPlan") -> Dict[str, Any]:
         "name": plan.name,
         "cost": plan.cost,
         "precision": plan.precision,
+        "pipeline": (None if plan.pipeline is None else {
+            "stage_groups": list(plan.pipeline.stage_groups),
+            "micro_batches": plan.pipeline.micro_batches,
+            "schedule": plan.pipeline.schedule,
+        }),
     }
 
 
@@ -276,10 +381,15 @@ def plan_from_json(d: Dict[str, Any]) -> "plan_lib.ParallelPlan":
         plan_lib.Stage(s["start"], s["stop"], tuple(s["spatial_axes"]),
                        tuple(s["batch_axes"]), s["remat"])
         for s in d["stages"])
+    pipe = d.get("pipeline")
+    spec = (plan_lib.PipelineSpec(
+        tuple(int(g) for g in pipe["stage_groups"]),
+        int(pipe["micro_batches"]), pipe["schedule"])
+        if pipe else None)
     return plan_lib.ParallelPlan(
         stages, tuple((a, int(n)) for a, n in d["mesh_axes"]),
         d["n_layers"], name=d["name"], cost=d["cost"],
-        precision=d["precision"])
+        precision=d["precision"], pipeline=spec)
 
 
 def conv_config_from_json(d: Dict[str, Any]) -> ConvNetConfig:

@@ -35,6 +35,7 @@ from repro.core import flags
 from repro.core import memory as memory_lib
 from repro.core import plan as plan_lib
 from repro.core import precision as precision_lib
+from repro.core import reshard as reshard_lib
 from repro.core.perf_model import V100
 from repro.core.spatial_conv import SpatialPartitioning
 from repro.launch import mesh as mesh_lib
@@ -66,6 +67,13 @@ class Report:
     # §11 guard telemetry: skipped steps, fp16 loss scale, I/O retries,
     # auto-resumes — empty dict for a pre-guard report
     telemetry: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # §13 pipeline axis: stage->device-group map, device-id span per
+    # group, and the modeled 1F1B bubble — all None without pipelining
+    stage_groups: Optional[Tuple[int, ...]] = None
+    group_devices: Optional[Tuple[Tuple[int, int], ...]] = None
+    micro_batches: Optional[int] = None
+    pipeline_schedule: Optional[str] = None
+    bubble_fraction: Optional[float] = None
 
     def __str__(self) -> str:
         budget = ("none" if self.memory_budget_bytes is None
@@ -74,11 +82,25 @@ class Report:
             f"[{a},{b}) spatial={[x for x in sp if x]} batch={list(ba)}"
             + (" remat" if rm else "")
             for a, b, sp, ba, rm in self.stages)
+        pipe = ""
+        if self.stage_groups is not None:
+            assign = "; ".join(
+                f"stage{i}[{a},{b})->group{g} devices[{lo},{hi})"
+                for i, ((a, b, _, _, _), g) in enumerate(
+                    zip(self.stages, self.stage_groups))
+                for lo, hi in [self.group_devices[g]])
+            pipe = (
+                f"\n  pipeline: {len(self.group_devices)} groups  "
+                f"micro_batches={self.micro_batches}  "
+                f"schedule={self.pipeline_schedule}  "
+                f"bubble={self.bubble_fraction:.1%}\n"
+                f"  groups: {assign}")
         return (
             f"Session[{self.plan_name}]\n"
             f"  mesh {self.mesh_shape}  precision={self.precision}  "
             f"grad_comm={self.grad_comm}  global_batch={self.global_batch}\n"
-            f"  stages: {stages}\n"
+            f"  stages: {stages}"
+            f"{pipe}\n"
             f"  params {self.param_count / 1e6:.2f}M  "
             f"modeled peak/device {self.modeled_peak.describe()}\n"
             f"  budget {budget}  predicted step "
@@ -112,16 +134,60 @@ def _spatial_options(cfg: ConvNetConfig, config: RunConfig) -> Tuple[int, ...]:
     return tuple(opts) or (config.spatial,)
 
 
+def _pipeline_degree_options(pipeline: int) -> Tuple[int, ...]:
+    """Pipeline group counts ``plan="auto"`` may pick from: powers of two
+    up to the configured ceiling, plus the ceiling itself."""
+    opts = {pipeline} | {2 ** k for k in range(1, pipeline.bit_length())
+                         if 2 ** k <= pipeline}
+    return tuple(sorted(p for p in opts if p > 1))
+
+
+def _with_schedule(plan: "plan_lib.ParallelPlan",
+                   schedule: str) -> "plan_lib.ParallelPlan":
+    """Re-pin a pipelined plan's schedule (the planner prices 1F1B; a
+    config asking for the sequential oracle keeps the same groups)."""
+    spec = plan.pipeline
+    if spec is None or spec.schedule == schedule:
+        return plan
+    return dataclasses.replace(
+        plan, pipeline=dataclasses.replace(spec, schedule=schedule),
+        name=plan.name.replace(f".{spec.schedule}", f".{schedule}"))
+
+
 def _resolve_plan(config: RunConfig, cfg: ConvNetConfig,
                   grad_comm: str) -> Tuple["plan_lib.ParallelPlan", str]:
     """(plan, precision name) for a validated config."""
     explicit = None if config.precision == "auto" else config.precision
     if isinstance(config.plan, plan_lib.ParallelPlan):
         return config.plan, explicit or config.plan.precision
+    if config.plan == "fixed" and config.pipeline > 1:
+        # fixed + pipeline: exactly the configured group count and
+        # micro-batch count; the perf model argmins only the boundary.
+        cands = plan_lib.candidate_pipeline_plans(
+            cfg, V100, pipeline_degrees=(config.pipeline,),
+            micro_batch_options=(config.micro_batches,),
+            num_devices=config.data, global_batch=config.global_batch,
+            grad_comm=grad_comm, schedule=config.pipeline_schedule)
+        if not cands:
+            raise RunConfigError(
+                "pipeline",
+                f"no admissible {config.pipeline}-group split of "
+                f"{cfg.name} at data={config.data}, micro_batches="
+                f"{config.micro_batches}",
+                "lower pipeline/micro_batches, or make data a multiple "
+                "of pipeline")
+        plan = min(cands, key=lambda p: p.cost)
+        return plan, explicit or plan.precision
     if config.plan == "auto" or config.memory_budget_gib is not None:
         kw: Dict[str, Any] = dict(
             spatial_degree=config.spatial, data_degree=config.data,
             global_batch=config.global_batch, grad_comm=grad_comm)
+        if config.pipeline > 1:
+            # auto + pipeline ceiling: the joint argmin may pick any
+            # group count up to the ceiling — or no pipelining at all.
+            kw.update(
+                pipeline_options=_pipeline_degree_options(config.pipeline),
+                micro_batch_options=(config.micro_batches,))
         if config.memory_budget_gib is not None:
             budget = config.memory_budget_gib * 2 ** 30
             precisions = (explicit,) if explicit else ("fp32", "bf16")
@@ -147,10 +213,12 @@ def _resolve_plan(config: RunConfig, cfg: ConvNetConfig,
                     f"(the {e.best_infeasible_plan.name} floor over "
                     f"spatial options {list(options)}), add devices, or "
                     f"allow lower precision") from e
+            plan = _with_schedule(plan, config.pipeline_schedule)
             return plan, explicit or plan.precision
         if explicit:
             kw["precisions"] = (explicit,)
-        plan = plan_lib.plan_convnet(cfg, V100, **kw)
+        plan = _with_schedule(plan_lib.plan_convnet(cfg, V100, **kw),
+                              config.pipeline_schedule)
         return plan, explicit or plan.precision
     # "fixed": the legacy fixed-degree layout (over-decomposition gathers
     # + replicated FC head), exactly what the kwarg path defaulted to
@@ -175,27 +243,41 @@ def _compile(config: RunConfig, *, abstract_state: bool) -> "Session":
     grad_comm = (config.grad_comm if config.grad_comm != "auto"
                  else flags.get("grad_comm"))
     plan, precision = _resolve_plan(config, cfg, grad_comm)
-    mesh = mesh_lib.make_plan_mesh(plan)
+    pipelined = plan.n_groups > 1
+    meshes = mesh_lib.make_pipeline_meshes(plan) if pipelined else None
+    mesh = meshes[0] if pipelined else mesh_lib.make_plan_mesh(plan)
     optimizer = _build_optimizer(config)
     init_fn = (cosmoflow_lib.init_params if cfg.arch == "cosmoflow"
                else unet_lib.init_params)
 
     def build_state():
         params = init_fn(jax.random.PRNGKey(config.seed), cfg)
-        opt_state = train_step_lib.make_convnet_opt_state(
-            cfg, optimizer, params, mesh=mesh, grad_comm=grad_comm,
-            plan=plan, precision=precision)
+        if pipelined:
+            opt_state = train_step_lib.make_pipeline_opt_state(
+                cfg, optimizer, params, plan=plan,
+                meshes=None if abstract_state else meshes,
+                precision=precision)
+        else:
+            opt_state = train_step_lib.make_convnet_opt_state(
+                cfg, optimizer, params, mesh=mesh, grad_comm=grad_comm,
+                plan=plan, precision=precision)
         return params, opt_state
 
     params, opt_state = (jax.eval_shape(build_state) if abstract_state
                          else build_state())
-    step_fn = train_step_lib.make_convnet_train_step(
-        cfg, mesh, optimizer, global_batch=config.global_batch,
-        use_pallas=config.use_pallas, overlap=config.overlap_halo,
-        grad_comm=grad_comm, plan=plan, precision=precision,
-        guard=config.guard)
+    if pipelined:
+        step_fn = train_step_lib.make_pipeline_train_step(
+            cfg, meshes, optimizer, plan=plan,
+            global_batch=config.global_batch, grad_comm=grad_comm,
+            precision=precision, guard=config.guard)
+    else:
+        step_fn = train_step_lib.make_convnet_train_step(
+            cfg, mesh, optimizer, global_batch=config.global_batch,
+            use_pallas=config.use_pallas, overlap=config.overlap_halo,
+            grad_comm=grad_comm, plan=plan, precision=precision,
+            guard=config.guard)
     return Session(config, cfg, mesh, plan, precision, grad_comm,
-                   optimizer, params, opt_state, step_fn)
+                   optimizer, params, opt_state, step_fn, meshes=meshes)
 
 
 class Session:
@@ -203,10 +285,13 @@ class Session:
     ``repro.api.compile`` (or ``Session.restore``), not directly."""
 
     def __init__(self, config, cfg, mesh, plan, precision, grad_comm,
-                 optimizer, params, opt_state, step_fn):
+                 optimizer, params, opt_state, step_fn, meshes=None):
         self.config: RunConfig = config
         self.cfg: ConvNetConfig = cfg
         self.mesh = mesh
+        # §13: one mesh per pipeline device group (None when unpipelined);
+        # self.mesh stays group 0's mesh, which eval/restore reuse
+        self.meshes = meshes
         self.plan: plan_lib.ParallelPlan = plan
         self.precision: str = precision_lib.get(precision).name
         self.grad_comm: str = grad_comm
@@ -274,6 +359,13 @@ class Session:
         gb = int(x.shape[0])
         key = ("eval", gb)
         fn = self._eval_fns.get(key)
+        params = self.params
+        if self.plan.n_groups > 1:
+            # §13: gather the per-group param subsets onto group 0's mesh
+            # — a pipelined plan's stages all share one trivial layout, so
+            # the whole model evaluates as plain data parallelism there
+            params = reshard_lib.to_group(
+                params, jax.sharding.NamedSharding(self.mesh, P()))
         if self.cfg.arch == "cosmoflow":
             if fn is None:
                 fn = train_step_lib.make_convnet_eval_step(
@@ -282,7 +374,7 @@ class Session:
                     overlap=self.config.overlap_halo,
                     precision=self.precision)
                 self._eval_fns[key] = fn
-            return fn(self.params, x, y)
+            return fn(params, x, y)
         if fn is None:
             fn = jax.jit(train_step_lib._build_convnet_step(
                 self.cfg, self.mesh, self.optimizer,
@@ -291,8 +383,10 @@ class Session:
                 overlap=self.config.overlap_halo, grad_comm=self.grad_comm,
                 stage="fwd", plan=self.plan, precision=self.precision))
             self._eval_fns[key] = fn
-        loss = fn(self.params, self.opt_state, x, y,
-                  jnp.asarray(0, jnp.int32))
+        # the fwd probe never touches opt state; a pipelined session's
+        # per-group tuple lives on other meshes, so pass none at all
+        opt_arg = None if self.plan.n_groups > 1 else self.opt_state
+        loss = fn(params, opt_arg, x, y, jnp.asarray(0, jnp.int32))
         return loss, None
 
     # --------------------------------------------------- introspection ----
@@ -354,6 +448,17 @@ class Session:
             grad_comm=self.grad_comm, precision=self.precision)
         budget = (None if self.config.memory_budget_gib is None
                   else self.config.memory_budget_gib * 2 ** 30)
+        pipe: Dict[str, Any] = {}
+        if self.plan.pipeline is not None and self.plan.n_groups > 1:
+            spec = self.plan.pipeline
+            d = self.plan.data_degree
+            pipe = dict(
+                stage_groups=tuple(spec.stage_groups),
+                group_devices=tuple((g * d, (g + 1) * d)
+                                    for g in range(self.plan.n_groups)),
+                micro_batches=spec.micro_batches,
+                pipeline_schedule=spec.schedule,
+                bubble_fraction=spec.bubble_fraction)
         return Report(
             plan_name=self.plan.name,
             stages=tuple((s.start, s.stop, tuple(s.spatial_axes),
@@ -367,14 +472,23 @@ class Session:
             modeled_peak=peak,
             memory_budget_bytes=budget,
             predicted_step_s=t,
-            telemetry=self.telemetry())
+            telemetry=self.telemetry(),
+            **pipe)
 
     def profile(self, batch=None, reps: int = 3) -> Dict[str, float]:
         """Measured phase attribution (DESIGN.md §4): seconds for the
         ``fwd``/``bwd``/``grad_comm``/``step`` probes plus the derived
         per-phase splits (``backward``, ``comm``, ``optimizer``).
-        ``batch=None`` profiles a synthetic batch."""
+        ``batch=None`` profiles a synthetic batch.
+
+        A pipelined session (§13) has no shard_map phase probes — its
+        phases interleave across device groups by construction — so it
+        reports the full step under the plan's schedule (``step``) and
+        under the blocking sequential oracle (``step_sequential``), plus
+        the measured ``pipeline_speedup`` ratio."""
         x, y = batch if batch is not None else self._synthetic_batch()
+        if self.plan.n_groups > 1:
+            return self._profile_pipeline(x, y, reps)
         probes = train_step_lib.make_convnet_phase_probes(
             self.cfg, self.mesh, self.optimizer,
             global_batch=self.config.global_batch,
@@ -394,6 +508,29 @@ class Session:
         out["backward"] = max(out["bwd"] - out["fwd"], 0.0)
         out["comm"] = max(out["grad_comm"] - out["bwd"], 0.0)
         out["optimizer"] = max(out["step"] - out["grad_comm"], 0.0)
+        for k, v in self.telemetry().items():
+            out[f"telemetry.{k}"] = v
+        return out
+
+    def _profile_pipeline(self, x, y, reps: int) -> Dict[str, float]:
+        seed = jnp.asarray(0, jnp.int32)
+        out: Dict[str, float] = {}
+        for label, sched in (("step", None), ("step_sequential",
+                                              "sequential")):
+            fn = train_step_lib.make_pipeline_train_step(
+                self.cfg, self.meshes, self.optimizer, plan=self.plan,
+                global_batch=self.config.global_batch,
+                grad_comm=self.grad_comm, precision=self.precision,
+                schedule=sched, donate=False)
+            jax.block_until_ready(fn(self.params, self.opt_state, x, y,
+                                     seed))  # compile
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                r = fn(self.params, self.opt_state, x, y, seed)
+            jax.block_until_ready(r)
+            out[label] = (time.perf_counter() - t0) / reps
+        out["pipeline_speedup"] = (out["step_sequential"] / out["step"]
+                                   if out["step"] else 0.0)
         for k, v in self.telemetry().items():
             out[f"telemetry.{k}"] = v
         return out
@@ -481,11 +618,19 @@ class Session:
     def _pinned_config(self) -> RunConfig:
         """The config with every ``"auto"`` resolved: the concrete model,
         the chosen plan, precision, grad-comm, and the plan's actual
-        degrees (a budgeted planner may have raised ``spatial``)."""
+        degrees (a budgeted planner may have raised ``spatial``).
+        ``data`` is the TOTAL data degree across groups (§13), so a
+        restore recomputes the same per-group split."""
+        pipe: Dict[str, Any] = {}
+        if self.plan.pipeline is not None and self.plan.n_groups > 1:
+            pipe = dict(micro_batches=self.plan.pipeline.micro_batches,
+                        pipeline_schedule=self.plan.pipeline.schedule)
         return dataclasses.replace(
             self.config, model=self.cfg, plan=self.plan,
             precision=self.precision, grad_comm=self.grad_comm,
-            data=self.plan.data_degree, spatial=self.plan.spatial_degree)
+            data=self.plan.data_degree * self.plan.n_groups,
+            spatial=self.plan.spatial_degree,
+            pipeline=self.plan.n_groups, **pipe)
 
     @classmethod
     def restore(cls, path: str) -> "Session":

@@ -19,6 +19,13 @@
   hooks that fire during backward), ``"monolithic"`` (the tail tree-wide
   psum, kept as the equivalence oracle), or ``"reduce_scatter"``
   (ZeRO-1: psum_scatter + sharded optimizer + all_gather).
+* ``pipeline_link_latency_s``: emulated one-way latency of the
+  inter-group link crossed at pipeline stage boundaries (DESIGN.md
+  §13). On the forced-host-device test topology the cross-group
+  ``device_put`` is a free memcpy, which flatters any blocking
+  schedule; the pipeline bench sets this (like the io bench throttles
+  its store) so the measured 1F1B-vs-sequential gap reflects how much
+  link latency each schedule hides. ``0.0`` (default) = no emulation.
 """
 from __future__ import annotations
 
@@ -27,7 +34,7 @@ import contextlib
 _STATE = {"scan_unroll": False, "remat": False,
           "ep_alltoall": True, "seq_shard_acts": False,
           "tp_shardmap_attn": False, "overlap_halo": True,
-          "grad_comm": "overlap"}
+          "grad_comm": "overlap", "pipeline_link_latency_s": 0.0}
 
 
 def get(name: str):

@@ -171,6 +171,10 @@ def plan_peak_bytes(
         precision if precision is not None
         else getattr(plan, "precision", "fp32"))
     act_bytes = pol.act_bytes
+    if getattr(plan, "pipeline", None) is not None and plan.n_groups > 1:
+        return _pipeline_peak_bytes(
+            cfg, plan, pol, global_batch=global_batch,
+            grad_comm=grad_comm, include_optimizer=include_optimizer)
 
     resident = 0.0   # saved-for-backward residuals
     transient = 0.0  # max recompute/backward working set
@@ -213,6 +217,102 @@ def plan_peak_bytes(
     return MemoryBreakdown(
         params=int(params), param_copy=int(param_copy), grads=int(grads),
         opt_state=opt, activations=int(resident), workspace=int(transient))
+
+
+def _pipeline_peak_bytes(
+    cfg: ConvNetConfig,
+    plan,
+    pol: "precision_lib.PrecisionPolicy",
+    *,
+    global_batch: int,
+    grad_comm: str,
+    include_optimizer: bool,
+) -> MemoryBreakdown:
+    """Per-device peak of a pipelined plan (DESIGN.md §13): every device
+    belongs to exactly ONE stage group, so the plan's peak is the max
+    over groups, each charged only its own layer slice and its
+    parameter shard of the step state (``perf_model.group_param_counts``
+    — the same split the allreduce pricing uses).
+
+    Activations follow the pipeline runtime's recompute contract: a
+    node's backward rebuilds the segment vjp from the boundary input,
+    so per in-flight micro-batch the resident set is the group's entry
+    activation (plus, for unet down groups, the skip outputs parked
+    until the decoder visit) — NOT the segment internals. The schedule
+    sets the window: group ``g`` admits ``min(P-g, M)`` forwards before
+    its first backward under 1F1B; the fully-drained sequential oracle
+    holds one. The whole segment's internals at a single micro-batch
+    reappear transiently inside the recompute backward (workspace),
+    which is why pipelined memory SHRINKS with the micro-batch count —
+    the capacity lever the budgeted planner trades against the bubble."""
+    act_bytes = pol.act_bytes
+    m = max(plan.pipeline.micro_batches, 1)
+    n_grp = plan.n_groups
+    sched = plan.pipeline.schedule
+    entries = _plan_entries(cfg, plan)
+    depth = cfg.depth if cfg.arch == "unet" else 0
+    per_group: List[List[Tuple[int, Any, Any]]] = [[] for _ in range(n_grp)]
+    for idx, (l, st) in enumerate(entries):
+        per_group[plan.stages.index(st)].append((idx, l, st))
+
+    group_params = perf_model.group_param_counts(
+        cfg, plan.group_layer_ranges())
+    best: Optional[MemoryBreakdown] = None
+    for g, sub in enumerate(per_group):
+        if not sub:
+            continue
+        vox_div, batch_div = _stage_divisors(plan, sub[0][2])
+        b_micro = global_batch / m / max(batch_div, 1)
+        win = 1 if sched == "sequential" else min(n_grp - g, m)
+        resident = 0.0
+        transient = 0.0   # segment saved set rebuilt by the recompute
+        work_max = 0.0    # one block's backward working set in flight
+        entry_l = sub[0][1]
+        if entry_l is None:  # group owns only the FC head
+            last = perf_model.cosmoflow_layers(cfg)[-1]
+            w_out = last.width // last.stride // (2 if last.pooled else 1)
+            resident += w_out ** 3 * last.cout * b_micro * act_bytes * win
+        else:
+            resident += (entry_l.width ** 3 / vox_div * entry_l.cin
+                         * b_micro * act_bytes * win)
+        for idx, l, st in sub:
+            if l is None:
+                last = perf_model.cosmoflow_layers(cfg)[-1]
+                w_out = (last.width // last.stride
+                         // (2 if last.pooled else 1))
+                flat = w_out ** 3 * last.cout
+                transient += (flat + 2 * sum(cfg.fc_dims)) \
+                    * b_micro * act_bytes
+                continue
+            n_in = l.width ** 3 / vox_div
+            n_out = (l.width // l.stride) ** 3 / vox_div
+            # recompute backward: the segment's saved set at ONE micro,
+            # plus the working set of whichever block is in flight
+            transient += (n_in * l.cin + _SAVED_PER_BLOCK * n_out
+                          * l.cout) * b_micro * act_bytes
+            work_max = max(work_max, _WORKING_SET_COPIES * n_out
+                           * l.cout * b_micro * act_bytes)
+            if cfg.arch == "unet" and idx < 2 * depth and idx % 2 == 1:
+                # encoder skip output: parked on the down group until
+                # its decoder visit, one copy per in-flight micro
+                resident += n_out * l.cout * b_micro * act_bytes * win
+        n_params = group_params[g]
+        params = n_params * 4
+        param_copy = n_params * act_bytes if pol.casts_params else 0
+        grads = n_params * 4
+        opt = 0
+        if include_optimizer:
+            opt = int(perf_model.opt_state_bytes(
+                int(n_params), grad_comm=grad_comm,
+                data_degree=max(batch_div, 1)))
+        cand = MemoryBreakdown(
+            params=int(params), param_copy=int(param_copy),
+            grads=int(grads), opt_state=opt, activations=int(resident),
+            workspace=int(transient + work_max))
+        if best is None or cand.total > best.total:
+            best = cand
+    assert best is not None
+    return best
 
 
 def data_parallel_peak_bytes(

@@ -354,6 +354,133 @@ def iteration_time(
     }
 
 
+def _plan_layer_map(
+        cfg: ConvNetConfig,
+        layers: List[ConvLayer]) -> List[Tuple[Tuple[int, ...], int, int]]:
+    """Per *plan* layer (``core/plan.py`` indexing): the perf-layer
+    indices it covers plus its entry activation ``(width, channels)``.
+
+    cosmoflow plan layer ``i`` is conv block ``i``; the trailing FC entry
+    covers no conv (compute unpriced — the head is tiny) but positions
+    the CNN->FC boundary activation. A unet plan layer is a resolution
+    *level*: its two encoder convs plus its deconv+2-conv decoder triple
+    (the level's down and up work live on the same device group, so skip
+    concats stay group-local); the last plan layer is the bottleneck."""
+    if cfg.arch == "cosmoflow":
+        out: List[Tuple[Tuple[int, ...], int, int]] = [
+            ((i,), l.width, l.cin) for i, l in enumerate(layers)]
+        last = layers[-1]
+        w_out = last.width // last.stride // (2 if last.pooled else 1)
+        out.append(((), w_out, last.cout))
+        return out
+    depth = cfg.depth
+    out = []
+    for lvl in range(depth):
+        dec0 = 2 * depth + 2 + 3 * (depth - 1 - lvl)
+        idxs = (2 * lvl, 2 * lvl + 1, dec0, dec0 + 1, dec0 + 2)
+        out.append((idxs, layers[2 * lvl].width, layers[2 * lvl].cin))
+    out.append(((2 * depth, 2 * depth + 1),
+                layers[2 * depth].width, layers[2 * depth].cin))
+    return out
+
+
+def group_param_counts(
+        cfg: ConvNetConfig,
+        group_ranges: Sequence[Tuple[int, int]]) -> List[float]:
+    """Per-group parameter counts of a pipelined split (DESIGN.md §13):
+    conv kernels summed over each group's plan-layer range, with every
+    non-conv parameter (FC head, BN scales, biases) charged to the plan
+    layer that owns it — cosmoflow's trailing FC entry, the unet
+    level-0 head. Shared by ``pipeline_iteration_time`` (per-group
+    allreduce volume) and ``core/memory.py`` (per-group step state), so
+    time and capacity always price the same parameter split."""
+    layers = (cosmoflow_layers(cfg) if cfg.arch == "cosmoflow"
+              else unet_layers(cfg))
+    pmap = _plan_layer_map(cfg, layers)
+    conv_params = [float(sum(layers[i].kernel ** 3 * layers[i].cin
+                             * layers[i].cout for i in idxs))
+                   for idxs, _, _ in pmap]
+    rem = max(cfg.param_count() - sum(conv_params), 0.0)
+    conv_params[-1 if cfg.arch == "cosmoflow" else 0] += rem
+    return [sum(conv_params[a:b]) for a, b in group_ranges]
+
+
+def pipeline_iteration_time(
+    cfg: ConvNetConfig,
+    hw: Hardware,
+    *,
+    group_ranges: Sequence[Tuple[int, int]],  # per-group plan-layer range
+    data_degree: int,          # data-parallel degree WITHIN each group
+    micro_batches: int,
+    global_batch: int,
+    schedule: str = "1f1b",
+    grad_comm: str = "overlap",
+    act_bytes: Optional[int] = None,
+) -> Dict[str, float]:
+    """Predicted seconds per iteration of a pipelined plan (DESIGN.md
+    §13): ``P = len(group_ranges)`` disjoint device groups, each a pure
+    ``data_degree``-way data-parallel mesh, executing ``micro_batches``
+    micro-batches.
+
+    Per-micro-batch stage time is forward + recompute-based backward
+    (``4x`` the forward — the runtime re-runs each segment's forward
+    inside its VJP, so pipelining never stores cross-segment residuals)
+    plus the *per-group* gradient allreduce: hook-overlapped with the
+    backward 3x under ``"overlap"``, serialized after it under
+    ``"monolithic"``. The ``"1f1b"`` schedule keeps every group busy once
+    filled — ``(M+P-1) * max_g t_g`` with bubble fraction
+    ``(P-1)/(M+P-1)`` — while the ``"sequential"`` oracle blocks each
+    micro-batch through all groups: ``M * sum_g t_g``. Cross-group
+    boundary transfers are point-to-point sends of the per-device
+    activation shard (2 directions per boundary for cosmoflow, 4 for
+    unet: the decoder comes back up through every cut)."""
+    layers = (cosmoflow_layers(cfg) if cfg.arch == "cosmoflow"
+              else unet_layers(cfg))
+    pmap = _plan_layer_map(cfg, layers)
+    d = max(data_degree, 1)
+    m = max(micro_batches, 1)
+    p = len(group_ranges)
+    per_dev = global_batch / m / d
+    elt = act_bytes or hw.bytes_per_elt
+    fp_layer: List[float] = []
+    for idxs, _, _ in pmap:
+        fp_layer.append(sum(
+            _layer_fp_time(hw, layers[i], 1, per_dev,
+                           act_bytes=act_bytes)[0] for i in idxs))
+    group_params = group_param_counts(cfg, group_ranges)
+
+    stage_times: List[float] = []
+    ar_max = 0.0
+    for (a, b), gparams in zip(group_ranges, group_params):
+        fp = sum(fp_layer[a:b])
+        ar = _allreduce(hw, gparams * 4, d)
+        ar_max = max(ar_max, ar)
+        if grad_comm == "monolithic":
+            stage_times.append(4 * fp + ar)
+        else:  # "overlap": hooks hide the reduce behind the 3x backward
+            stage_times.append(fp + max(3 * fp, ar))
+    if schedule == "sequential":
+        compute = m * sum(stage_times)
+    else:  # 1f1b: fill P-1, then the slowest group paces every slot
+        compute = (m + p - 1) * max(stage_times)
+    dirs = 2 if cfg.arch == "cosmoflow" else 4
+    transfer = 0.0
+    for a, _ in group_ranges[1:]:
+        _, w, c = pmap[a]
+        transfer += m * dirs * _sr(hw, w ** 3 * c * per_dev * elt)
+    total = compute + transfer
+    return {
+        "total": total,
+        "compute": compute,
+        "transfer": transfer,
+        "grad_comm": ar_max,
+        "stage_times": tuple(stage_times),
+        "bubble_fraction": (p - 1) / (m + p - 1),
+        "samples_per_s": global_batch / total,
+        "per_gpu_batch": per_dev,
+    }
+
+
 def memory_per_sample_bytes(cfg: ConvNetConfig,
                             batchnorm: Optional[bool] = None) -> float:
     """Activation memory per sample (fwd stores + grads), paper Table I."""

@@ -71,13 +71,60 @@ class Stage:
         return self.part.names
 
 
+PIPELINE_SCHEDULES = ("1f1b", "sequential")
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineSpec:
+    """Stage→device-group assignment plus the micro-batch schedule
+    (DESIGN.md §13). ``stage_groups[i]`` is the device group executing
+    plan stage ``i``; groups are *disjoint*, equal-sized slices of the
+    device list, each a pure data-parallel mesh. ``schedule`` picks the
+    overlapped ``1f1b`` lowering or the blocking ``sequential``
+    (GPipe-naive) oracle kept for equivalence testing — both split the
+    global batch into ``micro_batches`` micro-batches and accumulate
+    gradients, so they compute identical math."""
+
+    stage_groups: Tuple[int, ...]
+    micro_batches: int = 4
+    schedule: str = "1f1b"
+
+    def __post_init__(self):
+        gs = tuple(int(g) for g in self.stage_groups)
+        if not gs or gs[0] != 0 or any(
+                b not in (a, a + 1) for a, b in zip(gs, gs[1:])):
+            raise ValueError(
+                f"stage_groups={self.stage_groups}: must start at 0 and "
+                f"step by 0 or 1 (contiguous stages per group)")
+        if self.micro_batches < 1:
+            raise ValueError(
+                f"micro_batches={self.micro_batches}: must be >= 1")
+        if self.schedule not in PIPELINE_SCHEDULES:
+            raise ValueError(
+                f"schedule={self.schedule!r}: expected one of "
+                f"{PIPELINE_SCHEDULES}")
+
+    @property
+    def n_groups(self) -> int:
+        return self.stage_groups[-1] + 1
+
+    @property
+    def bubble_fraction(self) -> float:
+        """Idle fraction of the 1F1B steady state, ``(P-1)/(M+P-1)`` —
+        the classic pipeline-fill/drain cost the perf model charges."""
+        p, m = self.n_groups, self.micro_batches
+        return (p - 1) / (m + p - 1)
+
+
 @dataclasses.dataclass(frozen=True)
 class ParallelPlan:
     """Ordered stages covering layers ``[0, n_layers)`` plus the mesh-axis
     degrees they reference. ``cost`` is the planner's predicted iteration
     time (None for hand-built plans); ``precision`` the training policy
     the plan was priced for (``core/precision.py`` — activations take its
-    compute width, masters stay fp32)."""
+    compute width, masters stay fp32). ``pipeline`` (DESIGN.md §13) maps
+    stages onto disjoint device groups for micro-batched execution; the
+    ``mesh_axes`` degrees are then *per group*."""
 
     stages: Tuple[Stage, ...]
     mesh_axes: Tuple[Tuple[str, int], ...]  # (axis name, degree)
@@ -85,6 +132,7 @@ class ParallelPlan:
     name: str = ""
     cost: Optional[float] = None
     precision: str = "fp32"
+    pipeline: Optional[PipelineSpec] = None
 
     def __post_init__(self):
         pos = 0
@@ -104,6 +152,17 @@ class ParallelPlan:
             raise ValueError(
                 f"plan {self.name!r}: stages reference axes "
                 f"{sorted(used - known)} missing from mesh_axes")
+        if self.pipeline is not None:
+            if len(self.pipeline.stage_groups) != len(self.stages):
+                raise ValueError(
+                    f"plan {self.name!r}: pipeline maps "
+                    f"{len(self.pipeline.stage_groups)} stages but the "
+                    f"plan has {len(self.stages)}")
+            if self.pipeline.n_groups > 1 and self.spatial_axis_names:
+                raise ValueError(
+                    f"plan {self.name!r}: pipelined plans shard only the "
+                    f"batch within each device group; drop the spatial "
+                    f"axes or the pipeline")
 
     def stage_for(self, layer: int) -> Stage:
         for st in self.stages:
@@ -188,6 +247,34 @@ class ParallelPlan:
         return r
 
     @property
+    def n_groups(self) -> int:
+        """Number of disjoint pipeline device groups (1 when the plan is
+        not pipelined — the degenerate single-group case)."""
+        return self.pipeline.n_groups if self.pipeline is not None else 1
+
+    def group_for(self, layer: int) -> int:
+        """Device group executing ``layer`` (always 0 un-pipelined)."""
+        if self.pipeline is None:
+            self.stage_for(layer)  # keep the range check
+            return 0
+        for st, g in zip(self.stages, self.pipeline.stage_groups):
+            if st.start <= layer < st.stop:
+                return g
+        raise IndexError(f"layer {layer} outside plan [0, {self.n_layers})")
+
+    def group_layer_ranges(self) -> Tuple[Tuple[int, int], ...]:
+        """Per-group ``(start, stop)`` layer range, in group order — the
+        segment each group's devices own parameters and compute for."""
+        if self.pipeline is None:
+            return ((0, self.n_layers),)
+        lo: dict = {}
+        hi: dict = {}
+        for st, g in zip(self.stages, self.pipeline.stage_groups):
+            lo.setdefault(g, st.start)
+            hi[g] = st.stop
+        return tuple((lo[g], hi[g]) for g in range(self.pipeline.n_groups))
+
+    @property
     def uses_remat(self) -> bool:
         """Whether any stage sets plan-level rematerialization. When
         False, models fall back to the global ``flags.remat`` knob for
@@ -267,6 +354,41 @@ def uniform_plan(
                         spatial_axes=spatial_axes,
                         spatial_degrees=spatial_degrees,
                         data_axes=data_axes, data_degrees=data_degrees)
+
+
+def pipelined_convnet_plan(
+    cfg: ConvNetConfig,
+    *,
+    boundaries: Sequence[int],
+    micro_batches: int = 4,
+    schedule: str = "1f1b",
+    data_axes: Tuple[str, ...] = ("data",),
+    data_degrees: Tuple[int, ...] = (1,),
+    cost: Optional[float] = None,
+) -> ParallelPlan:
+    """Pipelined plan: ``len(boundaries)+1`` disjoint device groups, group
+    ``g`` owning the contiguous layer range between consecutive cuts.
+    Every stage is pure data-parallel within its group (``data_degrees``
+    is the *per-group* degree); cross-group activation/gradient transfer
+    at each cut is lowered by ``reshard.cross_group``. ``schedule`` picks
+    the 1F1B lowering or the blocking sequential oracle."""
+    n = (cosmoflow_n_layers(cfg) if cfg.arch == "cosmoflow"
+         else unet_n_layers(cfg))
+    cuts = tuple(sorted(int(b) for b in boundaries))
+    if any(b2 <= b1 for b1, b2 in zip(cuts, cuts[1:])) or any(
+            not 0 < b < n for b in cuts):
+        raise ValueError(
+            f"boundaries={boundaries}: need strictly increasing cuts "
+            f"inside (0, {n})")
+    edges = (0,) + cuts + (n,)
+    stages = tuple(Stage(a, b, (None, None, None), tuple(data_axes))
+                   for a, b in zip(edges, edges[1:]))
+    spec = PipelineSpec(tuple(range(len(stages))), micro_batches, schedule)
+    name = (f"{cfg.arch}.pipe{len(stages)}"
+            f"@{'-'.join(str(b) for b in cuts)}"
+            f".m{micro_batches}.{schedule}")
+    return ParallelPlan(stages, _axes_pairs(data_axes, data_degrees), n,
+                        name=name, cost=cost, pipeline=spec)
 
 
 def legacy_convnet_plan(
@@ -377,7 +499,19 @@ def price_plan(
     recompute (rematted entries pay their forward again in backward) and
     the precision policy's activation width (bf16/fp16 halve halo and
     reshard traffic; gradients stay fp32). Degrees are read from the
-    plan itself, so a plan is always priced for the mesh it records."""
+    plan itself, so a plan is always priced for the mesh it records.
+    Pipelined plans route to ``perf_model.pipeline_iteration_time`` —
+    the bubble-vs-transfer tradeoff priced against the same hardware."""
+    if plan.pipeline is not None and plan.pipeline.n_groups > 1:
+        pol = precision_lib.get(plan.precision)
+        r = perf_model.pipeline_iteration_time(
+            cfg, hw, group_ranges=plan.group_layer_ranges(),
+            data_degree=plan.data_degree,
+            micro_batches=plan.pipeline.micro_batches,
+            schedule=plan.pipeline.schedule,
+            global_batch=global_batch, grad_comm=grad_comm,
+            act_bytes=None if pol.act_bytes == 4 else pol.act_bytes)
+        return r["total"]
     ways = 1
     for a in plan.spatial_axis_names:
         ways *= plan.degree(a)
@@ -481,6 +615,48 @@ def candidate_convnet_plans(
     return out
 
 
+def candidate_pipeline_plans(
+    cfg: ConvNetConfig,
+    hw: "perf_model.Hardware",
+    *,
+    pipeline_degrees: Sequence[int],
+    micro_batch_options: Sequence[int] = (1, 2, 4, 8),
+    data_axes: Tuple[str, ...] = ("data",),
+    num_devices: int,
+    global_batch: int,
+    grad_comm: str = "overlap",
+    schedule: str = "1f1b",
+) -> List[ParallelPlan]:
+    """Enumerate pipelined candidates: every group count ``P`` in
+    ``pipeline_degrees`` (P >= 2) that divides the device pool, every
+    micro-batch count whose micro-batch divides by the per-group data
+    degree, every boundary placement — each priced with
+    ``pipeline_iteration_time``. ``reduce_scatter`` grad-comm has no
+    pipelined lowering (ZeRO-1 shards span the data axis a group no
+    longer covers alone), so the set is empty there."""
+    if grad_comm == "reduce_scatter":
+        return []
+    n = (cosmoflow_n_layers(cfg) if cfg.arch == "cosmoflow"
+         else unet_n_layers(cfg))
+    out: List[ParallelPlan] = []
+    for p_ in sorted({int(p) for p in pipeline_degrees}):
+        if p_ < 2 or p_ > n or num_devices % p_:
+            continue
+        d = num_devices // p_
+        for m in micro_batch_options:
+            if global_batch % m or (global_batch // m) % d:
+                continue
+            for cuts in itertools.combinations(range(1, n), p_ - 1):
+                plan = pipelined_convnet_plan(
+                    cfg, boundaries=cuts, micro_batches=m,
+                    schedule=schedule, data_axes=data_axes,
+                    data_degrees=(d,) + (1,) * (len(data_axes) - 1))
+                cost = price_plan(cfg, hw, plan, global_batch=global_batch,
+                                  grad_comm=grad_comm)
+                out.append(dataclasses.replace(plan, cost=cost))
+    return out
+
+
 def plan_convnet(
     cfg: ConvNetConfig,
     hw: "perf_model.Hardware",
@@ -489,6 +665,8 @@ def plan_convnet(
     precisions: Sequence[str] = ("fp32",),
     spatial_options: Optional[Sequence[int]] = None,
     remat_options: Optional[bool] = None,
+    pipeline_options: Optional[Sequence[int]] = None,
+    micro_batch_options: Sequence[int] = (1, 2, 4, 8),
     **kw,
 ) -> ParallelPlan:
     """Cost-model argmin over ``candidate_convnet_plans``. Ties break
@@ -502,19 +680,41 @@ def plan_convnet(
     the group — and its aggregate memory — grows), which is how a budget
     below the pure-data-parallel peak forces the hybrid layout instead
     of OOMing. ``remat_options`` expands per-stage remat assignments
-    (default: only when a budget is given). Raises with the best
-    infeasible candidate's breakdown when nothing fits."""
+    (default: only when a budget is given). ``pipeline_options`` adds
+    pipelined candidates (DESIGN.md §13) — every listed group count > 1
+    that divides the device pool, with micro-batch counts from
+    ``micro_batch_options`` — to the same argmin, so the spatial→batch
+    transition is the degenerate single-group case of a joint
+    (data x spatial x pipeline) search. Ties break toward non-pipelined
+    plans: the planner never pays the pipeline's runtime complexity for
+    a win the cost model can't see. Raises with the best infeasible
+    candidate's breakdown when nothing fits."""
     prec_rank = {"fp32": 0, "bf16": 1, "fp16": 2}
     expand_remat = (remat_options if remat_options is not None
                     else memory_budget_bytes is not None)
+    pipe_degrees = tuple(p for p in (pipeline_options or ()) if int(p) > 1)
+
+    def _pipeline_cands(num_devices: int) -> List[ParallelPlan]:
+        if not pipe_degrees:
+            return []
+        return candidate_pipeline_plans(
+            cfg, hw, pipeline_degrees=pipe_degrees,
+            micro_batch_options=micro_batch_options,
+            data_axes=kw.get("data_axes", ("data",)),
+            num_devices=num_devices, global_batch=kw["global_batch"],
+            grad_comm=kw.get("grad_comm", "overlap"))
+
     plain = (memory_budget_bytes is None and spatial_options is None
              and not expand_remat and tuple(precisions) == ("fp32",))
     if plain:
+        num_devices = kw["spatial_degree"] * kw.get("data_degree", 1)
         cands = candidate_convnet_plans(cfg, hw, **kw)
+        cands += _pipeline_cands(num_devices)
         if not cands:
             raise ValueError(
                 "no admissible plans (spatial degree too large?)")
-        return min(cands, key=lambda p: (p.cost, len(p.stages)))
+        return min(cands, key=lambda p: (p.cost, int(p.n_groups > 1),
+                                         len(p.stages)))
 
     from repro.core import memory as memory_lib  # deferred: plan <-> memory
 
@@ -524,40 +724,48 @@ def plan_convnet(
     base_degree = kw.pop("spatial_degree")
     options = tuple(spatial_options) if spatial_options else (base_degree,)
 
-    feasible: List[ParallelPlan] = []
-    best_infeasible: Optional[Tuple[ParallelPlan, Any]] = None
+    bases: List[Tuple[ParallelPlan, bool]] = []
     for s in options:
         try:
             cands = candidate_convnet_plans(cfg, hw, spatial_degree=s, **kw)
         except ValueError:
             continue  # degree over-decomposes layer 0: not admissible
-        for base in cands:
-            variants = (remat_variants(cfg, base) if expand_remat
-                        else [base])
-            for var in variants:
-                for prec in precisions:
-                    p = dataclasses.replace(
-                        var, precision=prec,
-                        name=(var.name if prec == "fp32"
-                              else f"{var.name}@{prec}"))
-                    if prec == "fp32" and not p.uses_remat:
-                        cost = base.cost  # identity variant: priced above
-                    else:
-                        cost = price_plan(cfg, hw, p,
-                                          global_batch=global_batch,
-                                          overlap=overlap,
-                                          grad_comm=grad_comm)
-                    p = dataclasses.replace(p, cost=cost)
-                    if memory_budget_bytes is not None:
-                        mem = memory_lib.plan_peak_bytes(
-                            cfg, p, global_batch=global_batch,
-                            grad_comm=grad_comm)
-                        if mem.total > memory_budget_bytes:
-                            if (best_infeasible is None
-                                    or mem.total < best_infeasible[1].total):
-                                best_infeasible = (p, mem)
-                            continue
-                    feasible.append(p)
+        bases += [(b, expand_remat) for b in cands]
+    # pipelined candidates recompute each segment's backward already, so
+    # per-stage remat variants add nothing on top
+    bases += [(b, False) for b in
+              _pipeline_cands(base_degree * kw.get("data_degree", 1))]
+
+    feasible: List[ParallelPlan] = []
+    best_infeasible: Optional[Tuple[ParallelPlan, Any]] = None
+    for base, can_remat in bases:
+        variants = (remat_variants(cfg, base) if can_remat else [base])
+        for var in variants:
+            for prec in precisions:
+                if base.pipeline is not None and prec == "fp16":
+                    continue  # no fp16 loss-scale machine under pipeline
+                p = dataclasses.replace(
+                    var, precision=prec,
+                    name=(var.name if prec == "fp32"
+                          else f"{var.name}@{prec}"))
+                if prec == "fp32" and not p.uses_remat:
+                    cost = base.cost  # identity variant: priced above
+                else:
+                    cost = price_plan(cfg, hw, p,
+                                      global_batch=global_batch,
+                                      overlap=overlap,
+                                      grad_comm=grad_comm)
+                p = dataclasses.replace(p, cost=cost)
+                if memory_budget_bytes is not None:
+                    mem = memory_lib.plan_peak_bytes(
+                        cfg, p, global_batch=global_batch,
+                        grad_comm=grad_comm)
+                    if mem.total > memory_budget_bytes:
+                        if (best_infeasible is None
+                                or mem.total < best_infeasible[1].total):
+                            best_infeasible = (p, mem)
+                        continue
+                feasible.append(p)
     if not feasible:
         if best_infeasible is not None:
             p, mem = best_infeasible
@@ -579,6 +787,7 @@ def plan_convnet(
     cut = min(p.cost for p in feasible) * 1.01
     pool = [p for p in feasible if p.cost <= cut]
     return min(pool, key=lambda p: (prec_rank.get(p.precision, 99),
+                                    int(p.n_groups > 1),
                                     int(p.uses_remat), len(p.stages),
                                     p.cost))
 

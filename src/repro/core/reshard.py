@@ -178,9 +178,51 @@ def apply(
     return h, sample_ids
 
 
+# ------------------------------------------------- cross-group (§13) -----
+def group_sharding(mesh: jax.sharding.Mesh,
+                   batch_axes: Sequence[str] = ("data",)
+                   ) -> jax.sharding.NamedSharding:
+    """Batch-sharded ``NamedSharding`` on one pipeline group's mesh: dim 0
+    split over the group's data axes, everything else replicated — the
+    layout every activation (and micro-batch input) holds inside a
+    group."""
+    spec = jax.sharding.PartitionSpec(
+        tuple(a for a in batch_axes if a in mesh.axis_names) or None)
+    return jax.sharding.NamedSharding(mesh, spec)
+
+
+def cross_group(x: jax.Array,
+                dst: jax.sharding.NamedSharding) -> jax.Array:
+    """Move a stage-boundary activation (or its cotangent, on the way
+    back down) to the next pipeline group's devices.
+
+    Pipeline groups are *disjoint* device sets, so this is not a
+    collective inside one mesh: it lowers to point-to-point device
+    copies (``jax.device_put`` with a destination sharding). Both groups
+    shard only the batch dim, and the per-group data degrees are equal,
+    so rank ``j`` of the source group sends its whole shard to rank
+    ``j`` of the destination group — the minimal transfer for the
+    layout. Asynchronous: dispatch returns immediately, which is what
+    lets 1F1B overlap the copy with both groups' compute."""
+    return jax.device_put(x, dst)
+
+
+def to_group(tree, dst: jax.sharding.NamedSharding):
+    """``cross_group`` over a pytree, skipping leaves already placed on
+    the destination (a no-op placement costs a dispatch anyway; the
+    check keeps steady-state micro-batch loops transfer-only where data
+    actually moves)."""
+    def put(leaf):
+        if getattr(leaf, "sharding", None) == dst:
+            return leaf
+        return jax.device_put(leaf, dst)
+    return jax.tree_util.tree_map(put, tree)
+
+
 __all__ = [
     "SpatialPartitioning", "spatial_allgather",
     "spatial_to_batch", "batch_to_spatial",
     "spatial_to_replicated", "replicated_to_spatial",
     "spatial_to_batch_oracle", "shard_batch", "apply",
+    "group_sharding", "cross_group", "to_group",
 ]

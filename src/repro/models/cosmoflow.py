@@ -226,6 +226,93 @@ def forward(
     return h
 
 
+def segment_param_names(cfg: ConvNetConfig, start: int, stop: int):
+    """Parameter names plan layers ``[start, stop)`` consume — the subset
+    a pipeline device group owns (DESIGN.md §13). Plan layer ``n_blocks``
+    is the FC head."""
+    n = num_blocks(cfg)
+    names = []
+    for i in range(start, min(stop, n)):
+        names.append(f"conv{i}_w")
+        if cfg.batchnorm:
+            names += [f"bn{i}_scale", f"bn{i}_bias"]
+    if stop > n:
+        for j in range(len(cfg.fc_dims) + 1):
+            names += [f"fc{j}_w", f"fc{j}_b"]
+    return tuple(names)
+
+
+def forward_range(
+    params: Params,
+    h: jax.Array,
+    cfg: ConvNetConfig,
+    start: int,
+    stop: int,
+    *,
+    bn_axes: Sequence[str] = (),
+    train: bool = False,
+    dropout_rng: Optional[jax.Array] = None,
+    sample_ids: Optional[jax.Array] = None,
+    grad_axes: Sequence[str] = (),
+    precision=None,
+) -> jax.Array:
+    """Plan layers ``[start, stop)`` in pure data-parallel layout — one
+    pipeline group's segment (DESIGN.md §13). ``params`` holds exactly
+    the segment's subset (``segment_param_names``); there is no spatial
+    partitioning and no resharding inside a group, so the body is the
+    same math as the matching slice of ``forward`` with every layout
+    trivial. ``sample_ids`` are the GLOBAL row ids of the local
+    micro-batch rows, so the per-(sample, layer) dropout masks equal the
+    no-pipeline plan's bit for bit."""
+    policy = precision_lib.get(precision if precision is not None
+                               else "fp32")
+    cst = ((lambda t: t.astype(policy.compute_dtype))
+           if policy.casts_params else (lambda t: t))
+    n = num_blocks(cfg)
+    npool = num_pools(cfg)
+    marker = grad_comm.GradMarker(grad_axes)
+    params = marker.begin(params)
+    if policy.casts_params and jnp.issubdtype(h.dtype, jnp.floating):
+        h = h.astype(policy.compute_dtype)
+    part = SpatialPartitioning()  # group-local: no spatial axes
+    for i in range(start, min(stop, n)):
+        stride = 2 if i == 3 else 1
+        w = cst(marker.mark(params[f"conv{i}_w"]))
+        h = conv3d(h, w, part, stride=stride)
+        if cfg.batchnorm:
+            h = dist_norm.distributed_batchnorm(
+                h, cst(marker.mark(params[f"bn{i}_scale"])),
+                cst(marker.mark(params[f"bn{i}_bias"])), bn_axes,
+                activation_slope=0.01)
+        else:
+            h = jax.nn.leaky_relu(h, negative_slope=0.01)
+        if i < npool:
+            h = maxpool3d(h, part, window=2, stride=2)
+    if stop > n:
+        h = h.reshape(h.shape[0], -1)
+        n_fc = len(cfg.fc_dims) + 1
+        for j in range(n_fc):
+            h = (h @ cst(marker.mark(params[f"fc{j}_w"]))
+                 + cst(marker.mark(params[f"fc{j}_b"])))
+            if j < n_fc - 1:
+                h = jax.nn.leaky_relu(h, negative_slope=0.01)
+                if train and dropout_rng is not None:
+                    keep = 0.8
+                    layer_rng = jax.random.fold_in(dropout_rng, j)
+
+                    def mask_row(sid):
+                        return jax.random.bernoulli(
+                            jax.random.fold_in(layer_rng, sid), keep,
+                            (h.shape[1],))
+
+                    row_ids = (sample_ids if sample_ids is not None
+                               else jnp.arange(h.shape[0]))
+                    mask = jax.vmap(mask_row)(row_ids)
+                    h = jnp.where(mask, h / keep, 0.0)
+    marker.assert_all_marked()
+    return h
+
+
 def mse_loss(
     params: Params,
     x: jax.Array,

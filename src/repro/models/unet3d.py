@@ -196,6 +196,131 @@ def forward(
     return out
 
 
+# --------------------------------------------- pipeline segments (§13) ----
+def down_param_names(cfg: ConvNetConfig, start: int, stop: int):
+    """Params of the descent half of levels ``[start, stop)`` (plus the
+    bottleneck when ``stop`` covers plan layer ``depth``) — one pipeline
+    group's down-node subset."""
+    names = []
+    for lvl in range(start, min(stop, cfg.depth)):
+        names += [f"enc{lvl}_{k}"
+                  for k in ("w0", "s0", "b0", "w1", "s1", "b1")]
+    if stop > cfg.depth:
+        names += ["mid_w0", "mid_s0", "mid_b0", "mid_w1", "mid_s1",
+                  "mid_b1"]
+    return tuple(names)
+
+
+def up_param_names(cfg: ConvNetConfig, start: int, stop: int):
+    """Params of the ascent half of levels ``[start, stop)`` (plus the
+    head conv when the group owns level 0)."""
+    names = []
+    for lvl in range(start, min(stop, cfg.depth)):
+        names += [f"dec{lvl}_{k}"
+                  for k in ("up", "w0", "s0", "b0", "w1", "s1", "b1")]
+    if start == 0:
+        names.append("head_w")
+    return tuple(names)
+
+
+def segment_param_names(cfg: ConvNetConfig, start: int, stop: int):
+    """Every param a pipeline group owning plan layers ``[start, stop)``
+    holds: its levels' encoder AND decoder halves (skip concats stay
+    group-local, mirroring the non-pipelined plan's level->stage rule),
+    the bottleneck for the deepest group, the head for group 0."""
+    return down_param_names(cfg, start, stop) + up_param_names(
+        cfg, start, stop)
+
+
+def down_range(
+    params: Params,
+    h: jax.Array,
+    cfg: ConvNetConfig,
+    start: int,
+    stop: int,
+    *,
+    bn_axes: Sequence[str] = (),
+    grad_axes: Sequence[str] = (),
+    precision=None,
+):
+    """Descent through levels ``[start, min(stop, depth))`` in pure
+    data-parallel layout — one pipeline group's down node. Includes the
+    bottleneck when ``stop == depth+1`` (the deepest group). Returns
+    ``(h, skips)``: the activation for the next group down (or the
+    ascent, for the deepest group) plus this group's skip tensors, which
+    stay resident on the group between its down and up visits."""
+    policy = precision_lib.get(precision if precision is not None
+                               else "fp32")
+    cst = ((lambda t: t.astype(policy.compute_dtype))
+           if policy.casts_params else (lambda t: t))
+    marker = grad_comm.GradMarker(grad_axes)
+    params = marker.begin(params)
+    part = SpatialPartitioning()
+    if policy.casts_params and jnp.issubdtype(h.dtype, jnp.floating):
+        h = h.astype(policy.compute_dtype)
+    skips = []
+    for lvl in range(start, min(stop, cfg.depth)):
+        for sfx in ("0", "1"):
+            h = _conv_bn_relu(
+                h, cst(marker.mark(params[f"enc{lvl}_w{sfx}"])),
+                cst(marker.mark(params[f"enc{lvl}_s{sfx}"])),
+                cst(marker.mark(params[f"enc{lvl}_b{sfx}"])),
+                part, bn_axes, False)
+        skips.append(h)
+        h = maxpool3d(h, part, window=2, stride=2)
+    if stop > cfg.depth:
+        for sfx in ("0", "1"):
+            h = _conv_bn_relu(
+                h, cst(marker.mark(params[f"mid_w{sfx}"])),
+                cst(marker.mark(params[f"mid_s{sfx}"])),
+                cst(marker.mark(params[f"mid_b{sfx}"])),
+                part, bn_axes, False)
+    marker.assert_all_marked()
+    return h, tuple(skips)
+
+
+def up_range(
+    params: Params,
+    h: jax.Array,
+    skips,
+    cfg: ConvNetConfig,
+    start: int,
+    stop: int,
+    *,
+    bn_axes: Sequence[str] = (),
+    grad_axes: Sequence[str] = (),
+    precision=None,
+) -> jax.Array:
+    """Ascent back through levels ``[start, min(stop, depth))`` — the
+    matching up node: deconv, concat with the down node's skip, conv
+    pair, per level in reverse; the head conv when the group owns level
+    0. ``skips`` is exactly what this group's ``down_range`` returned."""
+    policy = precision_lib.get(precision if precision is not None
+                               else "fp32")
+    cst = ((lambda t: t.astype(policy.compute_dtype))
+           if policy.casts_params else (lambda t: t))
+    marker = grad_comm.GradMarker(grad_axes)
+    params = marker.begin(params)
+    part = SpatialPartitioning()
+    if policy.casts_params and jnp.issubdtype(h.dtype, jnp.floating):
+        h = h.astype(policy.compute_dtype)
+    lo = start
+    for lvl in reversed(range(start, min(stop, cfg.depth))):
+        h = deconv3d(h, cst(marker.mark(params[f"dec{lvl}_up"])), part,
+                     stride=2)
+        h = jnp.concatenate([skips[lvl - lo], h], axis=-1)
+        for sfx in ("0", "1"):
+            h = _conv_bn_relu(
+                h, cst(marker.mark(params[f"dec{lvl}_w{sfx}"])),
+                cst(marker.mark(params[f"dec{lvl}_s{sfx}"])),
+                cst(marker.mark(params[f"dec{lvl}_b{sfx}"])),
+                part, bn_axes, False)
+    if start == 0:
+        h = conv3d(h, cst(marker.mark(params["head_w"])), part, stride=1)
+    marker.assert_all_marked()
+    return h
+
+
 def segmentation_loss(
     params: Params,
     x: jax.Array,
