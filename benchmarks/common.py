@@ -22,6 +22,11 @@ Two trims, both deliberate:
 benches fork a child with ``--xla_force_host_platform_device_count``
 (the parent keeps the real 1-device CPU backend) and the child reports
 ``ROW,name,us,derived`` lines that the parent forwards to ``emit``.
+
+Timed cells also emit ``bench.<name>`` spans through the §14 tracer
+(no-ops unless a bench activated one), and every BENCH_*.json row
+carries a ``trace_path`` provenance field — the trace the timing ran
+under, or None — schema-checked here by ``validate_rows``.
 """
 from __future__ import annotations
 
@@ -29,7 +34,36 @@ import os
 import subprocess
 import sys
 import time
-from typing import Callable, Dict, List
+from typing import Callable, Dict, List, Optional
+
+from repro.obs import trace as trace_lib
+
+# The BENCH_*.json row schema. ``validate_rows`` is the write gate:
+# every row the harness dumps must carry exactly these keys.
+ROW_KEYS = ("name", "us_per_call", "derived", "trace_path")
+
+
+def validate_rows(rows: List[dict]) -> None:
+    """Schema-check BENCH_*.json rows; raises ValueError naming the bad
+    row. name/derived are strings, us_per_call numeric, trace_path a
+    path string or None."""
+    for i, row in enumerate(rows):
+        if set(row) != set(ROW_KEYS):
+            raise ValueError(
+                f"row {i}: keys {sorted(row)} != schema {sorted(ROW_KEYS)}")
+        if not isinstance(row["name"], str) or not row["name"]:
+            raise ValueError(f"row {i}: name must be a non-empty string")
+        if not isinstance(row["us_per_call"], (int, float)) or isinstance(
+                row["us_per_call"], bool):
+            raise ValueError(f"row {i} ({row['name']}): us_per_call must "
+                             f"be numeric, got {row['us_per_call']!r}")
+        if not isinstance(row["derived"], str):
+            raise ValueError(f"row {i} ({row['name']}): derived must be a "
+                             f"string")
+        tp: Optional[str] = row["trace_path"]
+        if tp is not None and (not isinstance(tp, str) or not tp):
+            raise ValueError(f"row {i} ({row['name']}): trace_path must "
+                             f"be a non-empty path string or None")
 
 
 def trimmed_mean_us(samples: List[float], *, trim: str = "ends") -> float:
@@ -59,9 +93,13 @@ def interleaved_trimmed(calls: Dict[str, Callable[[], object]],
     samples: Dict[str, List[float]] = {k: [] for k in calls}
     for _ in range(rounds):
         for k, c in calls.items():
-            t0 = time.perf_counter()
-            c()
-            samples[k].append(time.perf_counter() - t0)
+            # the span brackets exactly the timed region, so a bench
+            # run under an active tracer shows its cells as bench.*
+            # tracks (no-op — NULL_SPAN — otherwise)
+            with trace_lib.span(f"bench.{k}"):
+                t0 = time.perf_counter()
+                c()
+                samples[k].append(time.perf_counter() - t0)
     return {k: trimmed_mean_us(v, trim=trim) for k, v in samples.items()}
 
 

@@ -41,6 +41,12 @@
                         emulated inter-group link latency, bitwise/fp
                         parity rows, and the planner's paper-scale
                         cost + memory-budget rows
+  obs                   observability (DESIGN.md §14): trace-on vs
+                        trace-off step overhead (target <=2%),
+                        modeled-vs-measured drift tables for both
+                        models across data/spatial/pipeline sample
+                        points, and the validated 2-group 1F1B
+                        Chrome/Perfetto trace artifact
 
 Output: ``name,us_per_call,derived`` CSV rows (derived = the figure's
 headline quantity). Run: ``PYTHONPATH=src python -m benchmarks.run
@@ -51,6 +57,7 @@ SHA, flag state and jax version so the trajectory is attributable.
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
@@ -60,15 +67,22 @@ from repro.core import compat
 import numpy as np
 
 try:  # python -m benchmarks.run (namespace package)
+    from benchmarks import common
     from benchmarks.common import interleaved_trimmed, run_rows_subprocess
 except ImportError:  # python benchmarks/run.py
+    import common
     from common import interleaved_trimmed, run_rows_subprocess
 
 ROWS = []
 
 
-def emit(name: str, us: float, derived: str):
-    ROWS.append((name, us, derived))
+def emit(name: str, us: float, derived: str, trace_path: str = None):
+    """Record one row. ``trace_path`` is §14 provenance: the Chrome
+    trace the timing ran under (obs bench rows), or None — stored
+    repo-relative so the committed BENCH json stays portable."""
+    if trace_path is not None:
+        trace_path = os.path.relpath(trace_path)
+    ROWS.append((name, us, derived, trace_path))
     print(f"{name},{us:.1f},{derived}")
 
 
@@ -1260,6 +1274,156 @@ def bench_pipeline(quick=False):
          f"no_pipeline_peak_gib={peak_base.total / 2 ** 30:.1f}")
 
 
+# ----------------------------------------------------------------- obs -----
+_OBS_BENCH_SCRIPT = """
+import dataclasses
+import json
+import jax
+import numpy as np
+from repro import configs
+from repro.api import RunConfig, compile as api_compile
+
+cfg = dataclasses.replace(configs.get_smoke_config('cosmoflow-512'),
+                          input_width=16)
+gb = 4
+
+# drift tables at hybrid sample points (4 forced host devices)
+for tag, kw in (('data2', dict(data=2)),
+                ('spatial2', dict(spatial=2)),
+                ('pipe2', dict(pipeline=2, data=2, micro_batches=2))):
+    s = api_compile(RunConfig(model=cfg, global_batch=gb, **kw))
+    rep = s.report(reps={reps})
+    ratios = ';'.join(
+        f"{{r.phase}}={{r.ratio:.1f}}x" if r.ratio is not None
+        else f"{{r.phase}}=na" for r in rep.rows)
+    print(f"ROW,obs.drift.cosmoflow.{{tag}},0.0,"
+          f"{{ratios}};flagged={{len(rep.flagged())}}")
+    s.close()
+
+# 2-group 1F1B run under an exporting tracer: the Perfetto artifact
+trace = {trace!r}
+s = api_compile(RunConfig(model=cfg, global_batch=gb, pipeline=2, data=2,
+                          micro_batches=2, trace=trace))
+kx, ky = jax.random.split(jax.random.PRNGKey(0))
+x = jax.random.normal(kx, (gb, 16, 16, 16, cfg.in_channels))
+y = jax.random.normal(ky, (gb, cfg.out_dim))
+for _ in range(3):
+    s.step((x, y))
+s.close()
+ev = json.load(open(trace))['traceEvents']
+tracks = sorted({{e['args']['name'] for e in ev if e.get('ph') == 'M'}})
+disp = [t for t in tracks if t.startswith('pipe-dispatch')]
+print(f"ROW,obs.trace.pipeline_1f1b,0.0,"
+      f"dispatcher_tracks={{len(disp)}};tracks={{len(tracks)}};"
+      f"events={{len(ev)}};steps=3;micro_batches=2")
+"""
+
+
+def bench_obs(quick=False):
+    """Observability subsystem (DESIGN.md §14), three views.
+
+    1. trace-on vs trace-off step time, interleaved trimmed-mean like
+       the api/resilience benches — the disabled path must cost nothing
+       (target <=2%, the verify.sh obs gate) and the enabled path is
+       priced honestly next to it, with the spans-per-step count.
+    2. modeled-vs-measured drift tables for both models on the 1-device
+       smoke, and (subprocess, 4 forced host devices) for CosmoFlow at
+       data=2 / spatial=2 / pipeline=2 sample points.
+    3. a 2-group 1F1B run under an exporting tracer: the emitted
+       Chrome/Perfetto trace is validated and its per-dispatcher-thread
+       track count emitted; the file is the row's ``trace_path``
+       provenance (load it at ui.perfetto.dev).
+    """
+    import dataclasses
+
+    from repro import configs
+    from repro.api import RunConfig, compile as api_compile
+    from repro.obs import trace as trace_lib
+    from repro.obs.export import validate_chrome_trace
+
+    out_dir = os.path.abspath(os.path.join("out", "obs"))
+    os.makedirs(out_dir, exist_ok=True)
+
+    # 1. overhead: the same step with the tracer off vs recording
+    W = 16 if quick else 32
+    cfg = dataclasses.replace(configs.get_smoke_config("cosmoflow-512"),
+                              input_width=W)
+    gb = 2
+    x = jax.random.normal(jax.random.PRNGKey(0),
+                          (gb, W, W, W, cfg.in_channels))
+    y = jax.random.normal(jax.random.PRNGKey(1), (gb, cfg.out_dim))
+    step_trace = os.path.join(out_dir, "bench_step_trace.json")
+    if os.path.exists(step_trace):
+        os.remove(step_trace)  # overwrite, don't uniquify, across runs
+    s_off = api_compile(RunConfig(model=cfg, global_batch=gb))
+    s_on = api_compile(RunConfig(model=cfg, global_batch=gb,
+                                 trace=step_trace))
+    # compile() made s_on's tracer process-active; scope recording to
+    # its own timed cell so the off cell really runs the disabled path
+    trace_lib.disable(s_on.tracer)
+
+    def on_call():
+        trace_lib.enable(s_on.tracer)
+        try:
+            jax.block_until_ready(s_on.step(x, y))
+        finally:
+            trace_lib.disable(s_on.tracer)
+
+    calls = {
+        "off": lambda: jax.block_until_ready(s_off.step(x, y)),
+        "on": on_call,
+    }
+    rounds = 10 if quick else 30
+    us = interleaved_trimmed(calls, rounds, trim="best", warmups=2)
+    n0 = len(s_on.tracer)
+    on_call()
+    spans_per_step = len(s_on.tracer) - n0
+    emit("obs.step.trace_off", us["off"], f"rounds={rounds};W={W}")
+    emit("obs.step.trace_on", us["on"],
+         f"overhead={100 * (us['on'] - us['off']) / us['off']:+.2f}"
+         f"%_vs_off;target<=2%;events_per_step={spans_per_step}",
+         trace_path=step_trace)
+    s_off.close()
+    s_on.close()  # exports step_trace
+    ok, problems = validate_chrome_trace(step_trace)
+    emit("obs.trace.step_valid", 0.0,
+         f"valid={ok};problems={len(problems)}", trace_path=step_trace)
+
+    # 2. drift tables, both models, 1-device smoke
+    for model in ("cosmoflow-512", "unet3d-256"):
+        mcfg = dataclasses.replace(configs.get_smoke_config(model),
+                                   input_width=16)
+        s = api_compile(RunConfig(model=mcfg, global_batch=2))
+        rep = s.report(reps=1 if quick else 2)
+        ratios = ";".join(
+            f"{r.phase}={r.ratio:.1f}x" if r.ratio is not None
+            else f"{r.phase}=na" for r in rep.rows)
+        emit(f"obs.drift.{mcfg.arch}", 0.0,
+             f"{ratios};flagged={len(rep.flagged())};source={rep.source}")
+        s.close()
+
+    # 3. hybrid sample points + the 1F1B Perfetto artifact (subprocess)
+    pipe_trace = os.path.join(out_dir, "bench_pipeline_trace.json")
+    if os.path.exists(pipe_trace):
+        os.remove(pipe_trace)
+    script = _OBS_BENCH_SCRIPT.format(reps=1 if quick else 2,
+                                      trace=pipe_trace)
+
+    def emit_pipe(name, us_, derived):
+        # the ROW line protocol carries no trace_path; re-attach the
+        # 1F1B artifact to the row that was measured under it
+        emit(name, us_, derived,
+             trace_path=(pipe_trace if name == "obs.trace.pipeline_1f1b"
+                         else None))
+
+    run_rows_subprocess(script, emit_pipe, errname="obs")
+    if os.path.exists(pipe_trace):
+        ok, problems = validate_chrome_trace(pipe_trace)
+        emit("obs.trace.pipeline_valid", 0.0,
+             f"valid={ok};problems={len(problems)}",
+             trace_path=pipe_trace)
+
+
 BENCHES = {
     "fig4_strong_scaling": bench_fig4_strong_scaling,
     "fig7_unet_strong": bench_fig7_unet_strong,
@@ -1277,6 +1441,7 @@ BENCHES = {
     "resilience": bench_resilience,
     "io": bench_io,
     "pipeline": bench_pipeline,
+    "obs": bench_obs,
 }
 
 
@@ -1322,16 +1487,18 @@ def main() -> None:
     if args.json:
         import json
 
+        rows = [
+            {"name": n, "us_per_call": us, "derived": d, "trace_path": tp}
+            for n, us, d, tp in ROWS
+        ]
+        common.validate_rows(rows)  # the §14 row-schema write gate
         payload = {
             "backend": jax.default_backend(),
             "device_count": jax.device_count(),
             "quick": args.quick,
             "only": args.only,
             **_provenance(),
-            "rows": [
-                {"name": n, "us_per_call": us, "derived": d}
-                for n, us, d in ROWS
-            ],
+            "rows": rows,
         }
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)

@@ -3,6 +3,7 @@
 #
 #   make verify            # or: bash scripts/verify.sh
 #   bash scripts/verify.sh pipeline         # just the §13 pipeline gate
+#   bash scripts/verify.sh obs              # just the §14 obs gate
 #   BENCH_OUT=BENCH_PR_N.json make verify   # also capture the bench rows
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -65,9 +66,104 @@ EOF
         -k "parity or bitwise or schedule_order or window"
 }
 
+obs_gate() {
+    echo "== obs gate =="
+    # DESIGN.md §14: (a) the disabled tracer path must cost <=2% on the
+    # trimmed-mean step (trace-off vs trace-on, interleaved, trim=best
+    # so one-sided load spikes on this box can't flake it), (b) the
+    # exported trace must pass the minimal Chrome-trace schema checker,
+    # and (c) Session.report() must produce a drift table covering
+    # fwd/bwd/comm/io/opt with span-sourced measured values for BOTH
+    # models. Explicit exit, not assert (PYTHONOPTIMIZE-safe).
+    python - <<'EOF'
+import dataclasses
+import os
+import sys
+import tempfile
+
+import jax
+
+from repro import configs
+from repro.api import RunConfig, compile as api_compile
+from repro.obs import trace as trace_lib
+from repro.obs.export import validate_chrome_trace
+from benchmarks.common import interleaved_trimmed
+
+cfg = dataclasses.replace(configs.get_smoke_config("cosmoflow-512"),
+                          input_width=16)
+gb = 2
+x, y = None, None
+td = tempfile.mkdtemp()
+trace_path = os.path.join(td, "trace.json")
+s_off = api_compile(RunConfig(model=cfg, global_batch=gb))
+s_on = api_compile(RunConfig(model=cfg, global_batch=gb, trace=trace_path))
+x, y = s_off._synthetic_batch()
+trace_lib.disable(s_on.tracer)  # recording scoped to the on cell only
+
+
+def on_call():
+    trace_lib.enable(s_on.tracer)
+    try:
+        jax.block_until_ready(s_on.step(x, y))
+    finally:
+        trace_lib.disable(s_on.tracer)
+
+
+calls = {"off": lambda: jax.block_until_ready(s_off.step(x, y)),
+         "on": on_call}
+us = interleaved_trimmed(calls, rounds=20, trim="best", warmups=2)
+over = (us["on"] - us["off"]) / us["off"]
+if over > 0.02:
+    sys.exit(f"obs gate: trace-on overhead {over * 100:+.2f}% > 2% "
+             f"({us['on']:.0f}us vs {us['off']:.0f}us)")
+print(f"obs gate: trace-on overhead {over * 100:+.2f}% (target <=2%)")
+s_off.close()
+s_on.close()  # flushes trace_path
+ok, problems = validate_chrome_trace(trace_path)
+if not ok:
+    sys.exit("obs gate: exported trace failed schema check:\n  "
+             + "\n  ".join(problems))
+print(f"obs gate: exported trace valid ({trace_path})")
+
+for model in ("cosmoflow-512", "unet3d-256"):
+    mcfg = dataclasses.replace(configs.get_smoke_config(model),
+                               input_width=16)
+    s = api_compile(RunConfig(model=mcfg, global_batch=2))
+    rep = s.report(reps=1)
+    for phase in ("fwd", "bwd", "comm", "io", "opt"):
+        try:
+            row = rep.row(phase)
+        except KeyError:
+            sys.exit(f"obs gate: {mcfg.arch} drift table missing {phase}")
+        if row.measured_s is None:
+            sys.exit(f"obs gate: {mcfg.arch} drift {phase} has no "
+                     f"span-sourced measurement: {row}")
+        # fwd/io are direct span means (must be positive wall time);
+        # bwd/comm/opt are cumulative-probe differences clamped at 0,
+        # which noise on this box can legitimately zero out
+        if phase in ("fwd", "io") and row.measured_s <= 0.0:
+            sys.exit(f"obs gate: {mcfg.arch} drift {phase} span mean "
+                     f"is not positive: {row}")
+    if rep.source != "spans":
+        sys.exit(f"obs gate: drift source {rep.source!r} != 'spans'")
+    print(f"obs gate: {mcfg.arch} drift table covers fwd/bwd/comm/io/opt "
+          f"({len(rep.flagged())} phases flagged on this backend)")
+    s.close()
+print("obs gate OK")
+EOF
+
+    # disabled-path + export + telemetry-stability unit contracts
+    python -m pytest -q tests/test_obs.py -x
+}
+
 if [ "${1:-}" = "pipeline" ]; then
     pipeline_gate
     echo "verify: OK (pipeline only)"
+    exit 0
+fi
+if [ "${1:-}" = "obs" ]; then
+    obs_gate
+    echo "verify: OK (obs only)"
     exit 0
 fi
 
@@ -383,5 +479,7 @@ python -m pytest -q tests/test_io_pipeline.py -x \
     -k "bitwise or deterministic or surfaces_on_consumer"
 
 pipeline_gate
+
+obs_gate
 
 echo "verify: OK"

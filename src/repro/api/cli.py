@@ -55,6 +55,12 @@ def add_session_args(ap) -> None:
     ap.add_argument("--ckpt", default=None,
                     help="checkpoint directory (final save; restore with "
                          "Session.restore)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome/Perfetto trace of the run to PATH "
+                         "on Session.close (open at ui.perfetto.dev; "
+                         "DESIGN.md §14)")
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="append one JSON metrics row per step to PATH")
 
 
 def config_from_args(base: RunConfig, args) -> RunConfig:
@@ -78,4 +84,8 @@ def config_from_args(base: RunConfig, args) -> RunConfig:
         over["grad_clip"] = args.grad_clip
     if args.ckpt:
         over["checkpoint_dir"] = args.ckpt
+    if args.trace:
+        over["trace"] = args.trace
+    if args.metrics:
+        over["metrics_jsonl"] = args.metrics
     return dataclasses.replace(base, **over)

@@ -95,6 +95,15 @@ class RunConfig:
     # Session.make_loader; 0 = synchronous loader (the equivalence
     # oracle), >=2 = double-buffered async reads + host->device place ---
     prefetch: int = 2
+    # --- observability (DESIGN.md §14): ``trace=False`` keeps every
+    # instrumentation site on the near-free no-op path (the ≤2% gate);
+    # ``True`` records spans into a Session-owned Tracer (export with
+    # ``Session.export_trace``); a PATH string additionally writes the
+    # Chrome/Perfetto trace there on ``Session.close``.
+    # ``metrics_jsonl`` appends one row per ``Session.step`` to a JSONL
+    # sink (step index, host wall time, guard/io counters).
+    trace: Union[bool, str] = False
+    metrics_jsonl: Optional[str] = None
 
     # ------------------------------------------------------ resolution ----
     def resolve_model(self) -> ConvNetConfig:
@@ -274,6 +283,23 @@ class RunConfig:
                 "prefetch", f"queue depth must be an int >= 0, got "
                 f"{self.prefetch!r}",
                 "use 0 for the synchronous loader, >= 2 to double-buffer")
+
+        if not isinstance(self.trace, (bool, str)):
+            raise RunConfigError(
+                "trace", f"must be a bool or a trace-file path, got "
+                f"{self.trace!r}",
+                "use False (off), True (record in memory), or "
+                "'out/trace.json' (record + export on close)")
+        if isinstance(self.trace, str) and not self.trace:
+            raise RunConfigError(
+                "trace", "empty trace path",
+                "pass a filename like 'out/trace.json', or True/False")
+        if self.metrics_jsonl is not None and not (
+                isinstance(self.metrics_jsonl, str) and self.metrics_jsonl):
+            raise RunConfigError(
+                "metrics_jsonl", f"must be a path or None, got "
+                f"{self.metrics_jsonl!r}",
+                "pass a filename like 'out/metrics.jsonl'")
 
         if self.save_every is not None and self.checkpoint_dir is None:
             raise RunConfigError(

@@ -39,6 +39,8 @@ from repro.core import reshard as reshard_lib
 from repro.core.perf_model import V100
 from repro.core.spatial_conv import SpatialPartitioning
 from repro.launch import mesh as mesh_lib
+from repro.obs import metrics as metrics_lib
+from repro.obs import trace as trace_lib
 from repro.models import cosmoflow as cosmoflow_lib
 from repro.models import unet3d as unet_lib
 from repro.optim.adam import Adam, constant, linear_decay, warmup_cosine
@@ -309,6 +311,26 @@ class Session:
         self._guarded_steps = 0
         self._applied_acc = jnp.zeros((), jnp.float32)
         self.resumes = 0
+        # §14 observability: every Session owns a Tracer + registry; the
+        # tracer only becomes the process-active one (and thus receives
+        # spans from the dispatcher/loader/checkpoint seams) when
+        # config.trace asks for it — otherwise every instrumentation
+        # site stays on the near-free no-op path.
+        self._closed = False
+        self.tracer = trace_lib.Tracer()
+        self._metrics = metrics_lib.MetricsRegistry()
+        self._trace_path = (config.trace if isinstance(config.trace, str)
+                            else None)
+        self._exported_traces: set = set()
+        self._metrics_sink = None
+        if config.metrics_jsonl:
+            d = os.path.dirname(config.metrics_jsonl)
+            if d:
+                os.makedirs(d, exist_ok=True)
+            self._metrics_sink = metrics_lib.MetricsJsonlSink(
+                config.metrics_jsonl)
+        if config.trace:
+            trace_lib.enable(self.tracer)
 
     # ----------------------------------------------------------- train ----
     @property
@@ -326,20 +348,33 @@ class Session:
         ``DeviceLost``), and ``grads.nonfinite`` (poisons the batch so
         the in-graph guard must skip the update)."""
         x, y = batch if y is None else (batch, y)
-        faults.fire("comm.stall", step=self._t)
-        faults.fire("device.loss", step=self._t)
-        if faults.fire("grads.nonfinite", step=self._t):
-            x = x * jnp.nan  # loss and every gradient go non-finite
-        seed = jnp.asarray(self._t, jnp.int32)
-        if self.config.guard:
-            self.params, self.opt_state, loss, applied = self._step_fn(
-                self.params, self.opt_state, x, y, seed)
-            self._guarded_steps += 1
-            self._applied_acc = self._applied_acc + applied
-        else:
-            self.params, self.opt_state, loss = self._step_fn(
-                self.params, self.opt_state, x, y, seed)
-        self._t += 1
+        sink = self._metrics_sink
+        t0 = time.perf_counter() if sink is not None else 0.0
+        with trace_lib.span("train.step", step=self._t):
+            faults.fire("comm.stall", step=self._t)
+            faults.fire("device.loss", step=self._t)
+            if faults.fire("grads.nonfinite", step=self._t):
+                x = x * jnp.nan  # loss and every gradient go non-finite
+            seed = jnp.asarray(self._t, jnp.int32)
+            if self.config.guard:
+                self.params, self.opt_state, loss, applied = self._step_fn(
+                    self.params, self.opt_state, x, y, seed)
+                self._guarded_steps += 1
+                self._applied_acc = self._applied_acc + applied
+            else:
+                self.params, self.opt_state, loss = self._step_fn(
+                    self.params, self.opt_state, x, y, seed)
+            self._t += 1
+        if sink is not None:
+            # host-visible counters only: converting loss (or the lazy
+            # skip accumulator) would force a device sync per step
+            row = {"step": self._t - 1,
+                   "wall_s": time.perf_counter() - t0,
+                   "guarded_steps": self._guarded_steps}
+            stall = sum(getattr(ld, "stall_s", 0.0) for ld in self._loaders)
+            if self._loaders:
+                row["io_stall_s"] = stall
+            sink.write(row)
         if (self.config.checkpoint_dir and self.config.save_every
                 and self._t % self.config.save_every == 0):
             if self.config.keep_last is not None:
@@ -404,7 +439,12 @@ class Session:
         distributed cache), and — when any loader prefetches —
         ``io_stall_s`` (residual time steps still blocked on a queued
         batch) and ``io_queue_occupancy`` (mean prefetch-queue depth at
-        serve time; ~depth when the pipeline keeps up)."""
+        serve time; ~depth when the pipeline keeps up).
+
+        §14: every value is routed through the Session's
+        ``MetricsRegistry`` gauges and the returned dict is read back
+        out of the registry — same keys, same values, one metrics
+        surface (``session._metrics``) for every other consumer."""
         skipped = (self._guarded_steps - float(self._applied_acc)
                    if self._guarded_steps else 0.0)
         scale = (float(self.opt_state.loss_scale)
@@ -431,7 +471,7 @@ class Session:
                 out["io_queue_occupancy"] = (
                     sum(ld.queue_occupancy() for ld in async_loaders)
                     / len(async_loaders))
-        return out
+        return self._metrics.absorb(out)
 
     def describe(self) -> Report:
         """One report: the chosen plan, the modeled per-device peak
@@ -502,8 +542,12 @@ class Session:
                                      seed))  # compile
             t0 = time.perf_counter()
             for _ in range(reps):
-                r = fn(self.params, self.opt_state, x, y, seed)
-            jax.block_until_ready(r)
+                # §14: each rep is a span, so a tracing session's drift
+                # table reads its measured phases from the span
+                # aggregates rather than from this function's return
+                with trace_lib.span(f"probe.{stage}"):
+                    r = fn(self.params, self.opt_state, x, y, seed)
+                    jax.block_until_ready(r)
             out[stage] = (time.perf_counter() - t0) / reps
         out["backward"] = max(out["bwd"] - out["fwd"], 0.0)
         out["comm"] = max(out["grad_comm"] - out["bwd"], 0.0)
@@ -526,14 +570,67 @@ class Session:
                                      seed))  # compile
             t0 = time.perf_counter()
             for _ in range(reps):
-                r = fn(self.params, self.opt_state, x, y, seed)
-            jax.block_until_ready(r)
+                with trace_lib.span(f"probe.{label}"):
+                    r = fn(self.params, self.opt_state, x, y, seed)
+                    jax.block_until_ready(r)
             out[label] = (time.perf_counter() - t0) / reps
         out["pipeline_speedup"] = (out["step_sequential"] / out["step"]
                                    if out["step"] else 0.0)
         for k, v in self.telemetry().items():
             out[f"telemetry.{k}"] = v
         return out
+
+    def report(self, batch=None, reps: int = 2,
+               flag_ratio: float = 2.0):
+        """Modeled-vs-measured drift table (DESIGN.md §14): the §8 perf
+        model's predicted per-phase seconds against measured span
+        aggregates, per-phase ratio flagged when off by more than
+        ``flag_ratio`` in either direction.
+
+        The measured column is sourced from spans: the phase probes are
+        run under this Session's tracer if their ``probe.*`` aggregates
+        are not already populated (a loader batch is driven the same way
+        for the ``io`` row), then the table reads
+        ``tracer.span_seconds()`` — never a probe's return dict. An
+        untraced session's tracer is activated only for the duration of
+        this call."""
+        from repro.obs import report as drift_lib
+
+        prev = trace_lib.active()
+        trace_lib.enable(self.tracer)
+        try:
+            have = self.tracer.span_seconds()
+            pipelined = self.plan.n_groups > 1
+            probes = (("step",) if pipelined
+                      else ("fwd", "bwd", "grad_comm", "step"))
+            if not all(f"probe.{p}" in have for p in probes):
+                self.profile(batch, reps=reps)
+            have = self.tracer.span_seconds()
+            if "io.load" not in have and "io.load.sync" not in have:
+                self._drive_io_sample()
+        finally:
+            if prev is not None and prev is not self.tracer:
+                trace_lib.enable(prev)
+            elif not self.config.trace:
+                trace_lib.disable(self.tracer)
+        modeled = drift_lib.modeled_phases(
+            self.cfg, V100, self.plan,
+            global_batch=self.config.global_batch,
+            grad_comm=self.grad_comm, precision=self.precision)
+        measured = drift_lib.measured_phases(self.tracer)
+        return drift_lib.drift(modeled, measured, flag_ratio=flag_ratio)
+
+    def _drive_io_sample(self, batches: int = 2) -> None:
+        """Load a couple of real batches through a (possibly existing)
+        loader so the drift table's ``io`` row has span data."""
+        gb = self.config.global_batch
+        loader = (self._loaders[-1] if self._loaders
+                  else self.make_loader(num_samples=max(gb, 4)))
+        order = loader.schedule_for_epoch(0)
+        n = max(len(order) // gb, 1)
+        for b in range(min(batches, n)):
+            jax.block_until_ready(
+                loader.load_batch(order[b * gb:(b + 1) * gb]))
 
     def _synthetic_batch(self):
         w, gb = self.cfg.input_width, self.config.global_batch
@@ -665,15 +762,54 @@ class Session:
         return sess
 
     # ------------------------------------------------------- lifecycle ----
+    def export_trace(self, path: Optional[str] = None) -> str:
+        """Write the Session's span log as a Chrome/Perfetto
+        ``trace.json`` and return the path actually written.
+
+        A path this Session already exported to is overwritten (the
+        longer trace supersedes it); a PRE-EXISTING file from another
+        run is never clobbered — the export uniquifies to
+        ``name-1.json``, ``name-2.json``, … so a supervisor's restarted
+        sessions each get their own file instead of interleaving."""
+        path = path or self._trace_path
+        if path is None:
+            raise ValueError("no path: pass export_trace(path) or set "
+                             "RunConfig(trace='out/trace.json')")
+        if path not in self._exported_traces and os.path.exists(path):
+            base, ext = os.path.splitext(path)
+            i = 1
+            while os.path.exists(f"{base}-{i}{ext}"):
+                i += 1
+            path = f"{base}-{i}{ext}"
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        self.tracer.export_chrome(path)
+        self._exported_traces.add(path)
+        return path
+
     def close(self) -> None:
         """Drain every loader (prefetch workers stop before their store
-        goes away — §12) and drop Session-owned temp datasets."""
+        goes away — §12), drop Session-owned temp datasets, and flush
+        the §14 trace/metrics sinks: a configured trace path is
+        exported, the JSONL sink is closed, and the tracer is
+        deregistered so a successor session's spans never interleave
+        into this run's file. Idempotent — a second ``close`` (e.g.
+        ``with`` + supervisor both closing) is a no-op."""
+        if self._closed:
+            return
+        self._closed = True
         for ld in self._loaders:
             ld.close()
         self._loaders = []
         for tmp in self._tmpdirs:
             tmp.cleanup()
         self._tmpdirs = []
+        if self._metrics_sink is not None:
+            self._metrics_sink.close()
+        if self._trace_path and len(self.tracer):
+            self.export_trace(self._trace_path)
+        trace_lib.disable(self.tracer)
 
     def __enter__(self) -> "Session":
         return self

@@ -51,6 +51,7 @@ from repro.api.session import _META_FILE, Session, _compile
 from repro.api.session import compile as api_compile
 from repro.core import faults
 from repro.core import plan as plan_lib
+from repro.obs import trace as trace_lib
 from repro.train import checkpoint
 
 _MIN_LOCAL_WIDTH = 4  # the §5 over-decomposition floor
@@ -227,6 +228,11 @@ def _start_session(cfg_now: RunConfig, root: str,
 
 def _event(report: SupervisorReport, verbose: bool, msg: str) -> None:
     report.events.append(msg)
+    # §14: supervisor lifecycle (cold start / resume / replan / failure)
+    # lands in whichever trace is active at that moment — failure events
+    # fire BEFORE sess.close() disables the dying session's tracer, so a
+    # restarted run's trace file starts clean at its own cold start.
+    trace_lib.instant("supervisor.event", msg=msg)
     if verbose:
         print(f"[supervisor] {msg}")
 

@@ -51,6 +51,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import compat
+from repro.obs import trace as trace_lib
 
 MODES = ("monolithic", "overlap", "reduce_scatter")
 
@@ -229,6 +230,15 @@ class GradMarker:
         if not self.axes:
             return tree
         plan = make_plan(tree, self.policy)
+        # §14 trace-time marker: hooks are emitted while jax traces the
+        # model, so the observable is the reduction STRUCTURE (how many
+        # buckets/leaves this program reduces), not per-step wall time —
+        # the in-graph psums themselves are priced by the perf model and
+        # measured by the grad_comm probe.
+        trace_lib.instant("trace.grad_comm.begin",
+                          buckets=plan.num_buckets, leaves=plan.n_leaves,
+                          axes=",".join(self.axes))
+        trace_lib.count("grad_comm.buckets", plan.num_buckets)
         leaves, treedef = jax.tree.flatten(tree)
         out = list(leaves)
         for b in plan.buckets:
@@ -248,6 +258,7 @@ class GradMarker:
         if self.policy.is_small(size):
             return x  # coalesced and hooked by begin()
         self._pending.pop(id(x), None)
+        trace_lib.count("grad_comm.marks")  # big-leaf hooks emitted
         return mark_gradient(x, self.axes)
 
     def assert_all_marked(self) -> None:

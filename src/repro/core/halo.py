@@ -41,6 +41,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import compat
+from repro.obs import trace as trace_lib
 
 
 def _shift_perm(n: int, direction: int):
@@ -152,6 +153,11 @@ def start_halo_exchange(
     if lo == 0 and hi == 0:
         return HaloSlabs(None, None)
     n = compat.axis_size(axis_name)
+    # §14 trace-time markers: exchanges execute inside shard_map, so the
+    # tracer counts the collectives each traced program EMITS (the
+    # minimum-ppermute contract below) rather than timing them — the
+    # halo wall cost is the perf model's / fwd probe's to attribute.
+    trace_lib.count("halo.exchanges")
 
     def _zeros(width: int) -> jax.Array:
         shape = x.shape[:dim] + (width,) + x.shape[dim + 1:]
@@ -169,6 +175,7 @@ def start_halo_exchange(
         to_next, to_prev = _extract_faces(x, dim, lo, hi, use_pallas)
         parts = [p for p in (to_next, to_prev) if p is not None]
         packed = parts[0] if len(parts) == 1 else jnp.concatenate(parts, dim)
+        trace_lib.count("halo.ppermutes")
         recv = lax.ppermute(packed, axis_name, [(0, 1), (1, 0)])
         # recv = [peer trailing lo rows | peer leading hi rows]
         recv_lo = lax.slice_in_dim(recv, 0, lo, axis=dim) if lo else None
@@ -190,11 +197,13 @@ def start_halo_exchange(
         perm = _shift_perm(n, +1)
         if wrap:
             perm = perm + [(n - 1, 0)]
+        trace_lib.count("halo.ppermutes")
         recv_lo = lax.ppermute(to_next, axis_name, perm)
     if hi > 0:
         perm = _shift_perm(n, -1)
         if wrap:
             perm = perm + [(0, n - 1)]
+        trace_lib.count("halo.ppermutes")
         recv_hi = lax.ppermute(to_prev, axis_name, perm)
     return HaloSlabs(recv_lo, recv_hi)
 

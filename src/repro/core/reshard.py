@@ -43,6 +43,7 @@ from jax import lax
 
 from repro.core import compat
 from repro.core import halo as halo_lib
+from repro.obs import trace as trace_lib
 from repro.core.spatial_conv import SpatialPartitioning, spatial_allgather
 
 # Dimension indices in NDHWC (batch is 0).
@@ -161,20 +162,29 @@ def apply(
                 "a different axis is not a plan transition)")
         if a_src is not None:
             if a_src in dst.batch_axes and a_src not in src.batch_axes:
+                kind = "spatial_to_batch"
                 fn = spatial_to_batch_oracle if oracle else spatial_to_batch
                 h = fn(h, a_src, dim)
                 if sample_ids is not None:
                     sample_ids = shard_batch(sample_ids, (a_src,))
             else:
+                kind = "spatial_to_replicated"
                 h = spatial_to_replicated(h, a_src, dim)
         else:
             if a_dst in src.batch_axes and a_dst not in dst.batch_axes:
+                kind = "batch_to_spatial"
                 h = batch_to_spatial(h, a_dst, dim)
                 # ids for the re-widened batch would need an all_gather;
                 # no current consumer needs them past an ascent.
                 sample_ids = None
             else:
+                kind = "replicated_to_spatial"
                 h = replicated_to_spatial(h, a_dst, dim)
+        # §14 trace-time marker: stage-boundary reshards execute inside
+        # the jitted program, so the tracer records how many transitions
+        # (and which lowering) each traced program emits.
+        trace_lib.count("reshard.transitions")
+        trace_lib.instant("trace.reshard", dim=d, kind=kind)
     return h, sample_ids
 
 
@@ -204,6 +214,7 @@ def cross_group(x: jax.Array,
     ``j`` of the destination group — the minimal transfer for the
     layout. Asynchronous: dispatch returns immediately, which is what
     lets 1F1B overlap the copy with both groups' compute."""
+    trace_lib.count("pipe.cross_group")
     return jax.device_put(x, dst)
 
 

@@ -40,6 +40,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.data.store import HyperslabStore
+from repro.obs import trace as trace_lib
 
 
 @dataclasses.dataclass
@@ -193,6 +194,10 @@ class SpatialParallelLoader:
     # ------------------------------------------------------------ batch ----
     def load_batch(self, sample_ids: np.ndarray):
         """Build the sharded (N, D, H, W, C) global batch for these samples."""
+        with trace_lib.span("io.load.sync", samples=len(sample_ids)):
+            return self._load_batch(sample_ids)
+
+    def _load_batch(self, sample_ids: np.ndarray):
         shape = (len(sample_ids),) + self.store.sample_shape
         ranks = self._rank_map(shape, self.sharding)
 

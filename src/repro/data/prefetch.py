@@ -58,6 +58,8 @@ from typing import Deque, Optional, Tuple
 
 import numpy as np
 
+from repro.obs import trace as trace_lib
+
 DEFAULT_DEPTH = 2
 
 
@@ -121,6 +123,13 @@ class PrefetchLoader:
         self._pos += gb
         return ids
 
+    def _traced_load(self, ids: np.ndarray):
+        # §14: the worker's whole read+place cost, on its own
+        # io-prefetch_* thread track — the measured side of the drift
+        # table's ``io`` row
+        with trace_lib.span("io.load", samples=len(ids)):
+            return self.inner.load_batch(ids)
+
     def _fill(self) -> None:
         while len(self._queue) < self.depth:
             ids = self._predict()
@@ -128,7 +137,7 @@ class PrefetchLoader:
                 return
             key = tuple(int(i) for i in ids)
             self._queue.append(
-                (key, self._pool.submit(self.inner.load_batch, ids)))
+                (key, self._pool.submit(self._traced_load, ids)))
 
     @staticmethod
     def _discard(fut: Future) -> None:
@@ -176,12 +185,13 @@ class PrefetchLoader:
             batch = self.inner.load_batch(sample_ids)
         else:
             t0 = time.perf_counter()
-            try:
-                batch = fut.result()  # re-raises StoreReadError here
-            except BaseException:
-                with self._lock:
-                    self._drain()  # queued successors are suspect too
-                raise
+            with trace_lib.span("io.wait"):  # residual consumer stall
+                try:
+                    batch = fut.result()  # re-raises StoreReadError here
+                except BaseException:
+                    with self._lock:
+                        self._drain()  # queued successors are suspect too
+                    raise
             self.stall_s += time.perf_counter() - t0
         with self._lock:
             if not self._closed:

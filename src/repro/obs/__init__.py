@@ -1,0 +1,33 @@
+"""Observability subsystem (DESIGN.md §14): thread-safe monotonic span
+tracing, a metrics registry superseding the scattered ``telemetry()``
+dicts, Chrome/Perfetto trace export, and modeled-vs-measured drift
+reports.
+
+Zero-dependency by construction: ``trace``/``metrics``/``export`` import
+only the stdlib, so every runtime module (halo, grad_comm, prefetch,
+checkpoint, the pipeline dispatcher) can instrument unconditionally.
+``repro.obs.report`` pulls in the perf model and is imported lazily by
+its consumers (``Session.report``), never from this package root.
+"""
+from repro.obs.trace import (  # noqa: F401
+    NULL_SPAN,
+    Tracer,
+    active,
+    count,
+    disable,
+    enable,
+    instant,
+    span,
+)
+from repro.obs.metrics import (  # noqa: F401
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsJsonlSink,
+    MetricsRegistry,
+)
+from repro.obs.export import (  # noqa: F401
+    chrome_trace_events,
+    validate_chrome_trace,
+    write_chrome_trace,
+)

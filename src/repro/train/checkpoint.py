@@ -44,6 +44,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.core import faults
+from repro.obs import trace as trace_lib
 
 MANIFEST = "manifest.json"
 _TMP_MARK = ".tmp-"
@@ -96,13 +97,14 @@ def _publish(tmp: str, final: str) -> None:
     fresh target is a single rename; replacing an existing checkpoint
     renames it aside first (the only non-atomic window is between the
     two renames — both directories are valid throughout)."""
-    if not os.path.exists(final):
+    with trace_lib.span("ckpt.publish", path=final):
+        if not os.path.exists(final):
+            os.rename(tmp, final)
+            return
+        old = f"{final}{_OLD_MARK}{uuid.uuid4().hex[:8]}"
+        os.rename(final, old)
         os.rename(tmp, final)
-        return
-    old = f"{final}{_OLD_MARK}{uuid.uuid4().hex[:8]}"
-    os.rename(final, old)
-    os.rename(tmp, final)
-    shutil.rmtree(old, ignore_errors=True)
+        shutil.rmtree(old, ignore_errors=True)
 
 
 def save(ckpt_dir: str, tree: Any, step: int = 0, *,
@@ -124,6 +126,13 @@ def save(ckpt_dir: str, tree: Any, step: int = 0, *,
     A crash anywhere before the final rename (including the injected
     ``checkpoint.write`` kill) leaves only a stale ``.tmp`` directory;
     the previous checkpoint at ``ckpt_dir`` stays intact and valid."""
+    with trace_lib.span("ckpt.save", path=ckpt_dir, step=step):
+        _save(ckpt_dir, tree, step, precision=precision,
+              extra_files=extra_files)
+
+
+def _save(ckpt_dir: str, tree: Any, step: int, *,
+          precision: Optional[str], extra_files) -> None:
     parent = os.path.dirname(os.path.abspath(ckpt_dir))
     os.makedirs(parent, exist_ok=True)
     tmp = f"{ckpt_dir}{_TMP_MARK}{uuid.uuid4().hex[:8]}"
@@ -184,6 +193,13 @@ def restore(ckpt_dir: str, like: Any, shardings: Optional[Any] = None,
     optimizer state under the spec it was sharded with), else a plain
     replicated ``jnp`` array. ``verify`` checks each leaf against its
     manifest CRC and raises ``CheckpointCorrupt`` on mismatch."""
+    with trace_lib.span("ckpt.restore", path=ckpt_dir):
+        return _restore(ckpt_dir, like, shardings, mesh=mesh,
+                        verify=verify)
+
+
+def _restore(ckpt_dir: str, like: Any, shardings: Optional[Any],
+             *, mesh, verify: bool) -> Any:
     manifest = _load_manifest(ckpt_dir)
     by_path = {l["path"]: l for l in manifest["leaves"]}
     keep_masters = manifest.get("precision") is not None

@@ -43,6 +43,7 @@ from repro.core.sharding import ShardingPolicy
 from repro.core.spatial_conv import SpatialPartitioning
 from repro.models import cosmoflow as cosmoflow_lib
 from repro.models import unet3d as unet_lib
+from repro.obs import trace as trace_lib
 from repro.train import guard as guard_lib
 
 
@@ -224,6 +225,12 @@ def _build_convnet_step(
                    else None)
 
     def local_step(params, opt_state, x, y, seed):
+        # §14 trace-time marker: this host code runs once per jit trace,
+        # not per step — the instant records WHICH program (fwd / bwd /
+        # grad_comm / step, and its reduction mode) was traced and when;
+        # the in-graph phases themselves are attributed by the probes.
+        trace_lib.instant("trace.convnet_step", stage=stage, mode=mode,
+                          arch=cfg.arch)
         # dropout rng is NOT folded per-device: masks are derived per global
         # sample id so the redundant FC compute on every spatial shard sees
         # identical masks and results are mesh-shape invariant.
@@ -919,8 +926,9 @@ def make_pipeline_train_step(
         # latency burns on a link thread, not a dispatcher, the way a NIC
         # would carry it — a schedule only pays it where a consumer truly
         # has nothing else to dispatch
-        time.sleep(lat)
-        return jax.device_put(val, dst)
+        with trace_lib.span("pipe.link", latency_s=lat):
+            time.sleep(lat)
+            return jax.device_put(val, dst)
 
     add_tree = jax.jit(lambda u, v: jax.tree.map(jnp.add, u, v),
                        donate_argnums=(0,))
@@ -945,15 +953,16 @@ def make_pipeline_train_step(
     upd_j = jax.jit(upd, donate_argnums=(0, 1) if donate else ())
 
     def step(params, opt_states, x, y, seed):
-        pgs = [reshard_lib.to_group(pg, rep[g])
-               for g, pg in enumerate(pipeline_group_params(
-                   cfg, plan, params))]
-        opts = [reshard_lib.to_group(s, rep[g])
-                for g, s in enumerate(opt_states)]
-        xs = [jax.device_put(x[m * mb:(m + 1) * mb], bat[0])
-              for m in range(M)]
-        ys = [jax.device_put(y[m * mb:(m + 1) * mb], bat[loss_group])
-              for m in range(M)]
+        with trace_lib.span("pipe.place", micro_batches=M):
+            pgs = [reshard_lib.to_group(pg, rep[g])
+                   for g, pg in enumerate(pipeline_group_params(
+                       cfg, plan, params))]
+            opts = [reshard_lib.to_group(s, rep[g])
+                    for g, s in enumerate(opt_states)]
+            xs = [jax.device_put(x[m * mb:(m + 1) * mb], bat[0])
+                  for m in range(M)]
+            ys = [jax.device_put(y[m * mb:(m + 1) * mb], bat[loss_group])
+                  for m in range(M)]
 
         carry, gcar = _Slots(), _Slots()
         for m in range(M):
@@ -982,6 +991,11 @@ def make_pipeline_train_step(
         track = sched == "sequential"  # 1f1b has no SYNC: don't pin refs
 
         def run_group(g):
+            # §14: each op is a span on THIS dispatcher thread's track
+            # (pipe-dispatch_g), and the cross-group handoff wait is its
+            # own span — so in the exported trace the 1F1B warmup /
+            # steady-state / drain structure and the bubble are visible
+            # as the pipe.wait spans and the gaps between ops.
             pend = []  # this group's dispatches since the last SYNC
             for op, k, m in group_ops[g]:
                 if op == "SYNC":
@@ -989,62 +1003,75 @@ def make_pipeline_train_step(
                     # is admitted ANYWHERE until micro-batch m has fully
                     # drained — every group blocks on its own dispatches,
                     # then all dispatchers cross the barrier together
-                    barrier.wait()
-                    jax.block_until_ready(pend)
-                    pend = []
-                    barrier.wait()
+                    with trace_lib.span("pipe.sync", group=g, micro=m):
+                        barrier.wait()
+                        jax.block_until_ready(pend)
+                        pend = []
+                        barrier.wait()
                     continue
                 nd = nodes[k]
                 if op == "F":
-                    h = carry.take((k, m))
-                    if nd["kind"] == "down":
-                        out, sk = nd["fwd"](pgs[g], h)
-                        stash[(k, m)] = sk
-                        saved[(k, m)] = (h,)
-                    elif nd["kind"] == "up":
-                        sk = stash[(nd["partner"], m)]
-                        out = nd["fwd"](pgs[g], h, sk)
-                        saved[(k, m)] = (h, sk)
-                    else:  # seg / core
-                        out = nd["fwd"](pgs[g], h)
-                        saved[(k, m)] = (h,)
-                    if track:
-                        pend.append(out)
-                    route(out, g, k + 1, carry, m)
+                    with trace_lib.span("pipe.wait", group=g, node=k,
+                                        micro=m, op="F"):
+                        h = carry.take((k, m))
+                    with trace_lib.span("pipe.F", group=g, node=k,
+                                        micro=m):
+                        if nd["kind"] == "down":
+                            out, sk = nd["fwd"](pgs[g], h)
+                            stash[(k, m)] = sk
+                            saved[(k, m)] = (h,)
+                        elif nd["kind"] == "up":
+                            sk = stash[(nd["partner"], m)]
+                            out = nd["fwd"](pgs[g], h, sk)
+                            saved[(k, m)] = (h, sk)
+                        else:  # seg / core
+                            out = nd["fwd"](pgs[g], h)
+                            saved[(k, m)] = (h,)
+                        if track:
+                            pend.append(out)
+                        route(out, g, k + 1, carry, m)
                 elif op == "FB":
-                    h = carry.take((k, m))
-                    if nd["kind"] == "uploss":
-                        sk = stash[(nd["partner"], m)]
-                        loss, gp, gh, gsk = nd["fused"](pgs[g], h, sk,
-                                                        ys[m])
-                        gskc[(nd["partner"], m)] = gsk
-                    else:  # cosmoflow fused loss
-                        loss, gp, gh = nd["fused"](pgs[g], h, ys[m], seed,
-                                                   m * mb)
-                    losses[m] = loss
-                    bump(k, gp)
-                    if track:
-                        pend.append(gh)
-                    route(gh, g, k - 1, gcar, m)
-                else:  # B
-                    gout = gcar.take((k, m))
-                    if nd["kind"] == "down":
-                        gsk = gskc.pop((k, m))
-                        (h,) = saved.pop((k, m))
-                        gp, gh = nd["bwd"](pgs[g], h, gout, gsk)
-                        stash.pop((k, m), None)
-                    elif nd["kind"] == "up":
-                        h, sk = saved.pop((k, m))
-                        gp, gh, gsk = nd["bwd"](pgs[g], h, sk, gout)
-                        gskc[(nd["partner"], m)] = gsk
-                    else:
-                        (h,) = saved.pop((k, m))
-                        gp, gh = nd["bwd"](pgs[g], h, gout)
-                    if track:
-                        pend.append(gh)
-                    bump(k, gp)
-                    if k > 0:
+                    with trace_lib.span("pipe.wait", group=g, node=k,
+                                        micro=m, op="FB"):
+                        h = carry.take((k, m))
+                    with trace_lib.span("pipe.FB", group=g, node=k,
+                                        micro=m):
+                        if nd["kind"] == "uploss":
+                            sk = stash[(nd["partner"], m)]
+                            loss, gp, gh, gsk = nd["fused"](pgs[g], h, sk,
+                                                            ys[m])
+                            gskc[(nd["partner"], m)] = gsk
+                        else:  # cosmoflow fused loss
+                            loss, gp, gh = nd["fused"](pgs[g], h, ys[m],
+                                                       seed, m * mb)
+                        losses[m] = loss
+                        bump(k, gp)
+                        if track:
+                            pend.append(gh)
                         route(gh, g, k - 1, gcar, m)
+                else:  # B
+                    with trace_lib.span("pipe.wait", group=g, node=k,
+                                        micro=m, op="B"):
+                        gout = gcar.take((k, m))
+                    with trace_lib.span("pipe.B", group=g, node=k,
+                                        micro=m):
+                        if nd["kind"] == "down":
+                            gsk = gskc.pop((k, m))
+                            (h,) = saved.pop((k, m))
+                            gp, gh = nd["bwd"](pgs[g], h, gout, gsk)
+                            stash.pop((k, m), None)
+                        elif nd["kind"] == "up":
+                            h, sk = saved.pop((k, m))
+                            gp, gh, gsk = nd["bwd"](pgs[g], h, sk, gout)
+                            gskc[(nd["partner"], m)] = gsk
+                        else:
+                            (h,) = saved.pop((k, m))
+                            gp, gh = nd["bwd"](pgs[g], h, gout)
+                        if track:
+                            pend.append(gh)
+                        bump(k, gp)
+                        if k > 0:
+                            route(gh, g, k - 1, gcar, m)
 
         futs = [dispatchers.submit(run_group, g) for g in range(n_grp)]
         done, _ = _futures.wait(futs,
@@ -1071,22 +1098,23 @@ def make_pipeline_train_step(
             merged.append(mg)
 
         applied = None
-        if guard:
-            fin = [flag_of_loss(merged[g], total) if g == loss_group
-                   else flag_of(merged[g]) for g in range(n_grp)]
-        new_pg, new_opt = [], []
-        for g in range(n_grp):
+        with trace_lib.span("pipe.update"):
             if guard:
-                fl = [fin[g]] + [
-                    jax.device_put(fin[j], rep[g])
-                    for j in range(n_grp) if j != g]
-                p2, s2, f = upd_j(pgs[g], opts[g], merged[g], *fl)
-                if g == 0:
-                    applied = f
-            else:
-                p2, s2 = upd_j(pgs[g], opts[g], merged[g])
-            new_pg.append(p2)
-            new_opt.append(s2)
+                fin = [flag_of_loss(merged[g], total) if g == loss_group
+                       else flag_of(merged[g]) for g in range(n_grp)]
+            new_pg, new_opt = [], []
+            for g in range(n_grp):
+                if guard:
+                    fl = [fin[g]] + [
+                        jax.device_put(fin[j], rep[g])
+                        for j in range(n_grp) if j != g]
+                    p2, s2, f = upd_j(pgs[g], opts[g], merged[g], *fl)
+                    if g == 0:
+                        applied = f
+                else:
+                    p2, s2 = upd_j(pgs[g], opts[g], merged[g])
+                new_pg.append(p2)
+                new_opt.append(s2)
         out_params = {}
         for pg in new_pg:
             out_params.update(pg)
