@@ -1424,6 +1424,131 @@ def bench_obs(quick=False):
              trace_path=pipe_trace)
 
 
+# ------------------------------------------------------------ serving -----
+_SERVE_SPATIAL_SCRIPT = """
+import numpy as np
+from repro.api import RunConfig, compile as api_compile
+from repro.configs.base import ConvNetConfig
+
+W = {W}
+cfg = ConvNetConfig(name='serve_sweep', family='conv3d', arch='cosmoflow',
+                    input_width=W, in_channels=1, out_dim=4,
+                    conv_channels=(4, 8), fc_dims=(32, 16))
+r = np.random.RandomState(0)
+x = r.randn(2, W, W, W, 1).astype(np.float32)
+oracle = None
+for s in (1, 2, 4, 8):
+    sess = api_compile(RunConfig(model=cfg, mode='infer', global_batch=2,
+                                 spatial=s, seed=0))
+    p1 = np.asarray(sess.predict(x))
+    p2 = np.asarray(sess.predict(x))
+    peak = sess.describe().modeled_peak
+    sess.close()
+    # bitwise at the SAME degree; vs the s=1 oracle the BN psum
+    # reduction order differs, so report the measured drift honestly
+    same_degree_bitwise = bool(np.array_equal(p1, p2))
+    if oracle is None:
+        oracle = p1
+    diff = float(np.max(np.abs(p1 - oracle)))
+    print(f"ROW,serve.spatial.s{{s}},0.0,"
+          f"modeled_peak_mb={{peak.total / 2**20:.2f}};"
+          f"workspace_mb={{peak.workspace / 2**20:.2f}};"
+          f"same_degree_bitwise={{same_degree_bitwise}};"
+          f"max_abs_vs_s1={{diff:.2e}}")
+"""
+
+
+def bench_serve(quick=False):
+    """Inference serving (DESIGN.md §15), three views.
+
+    1. batched harness vs the unbatched oracle: the same requests served
+       one forward per request vs coalesced through ``serve()`` at
+       ``max_batch=16`` — amortized us/request for both, the throughput
+       ratio (the verify.sh serve gate holds >=1.3x), and the harness's
+       enqueue->reply p50/p95/p99 latency quantiles.
+    2. a traced serve session: the exported Chrome trace (the row's
+       ``trace_path`` provenance) is validated and its serve.* span
+       counts emitted.
+    3. the spatial-degree sweep (subprocess, 8 forced host devices):
+       the §9 forward-only modeled peak falling with spatial degree,
+       with the two-tier parity contract priced honestly — bitwise on
+       repeat at the SAME degree, measured max-abs drift vs the
+       1-device oracle across degrees (BN psum reduction order).
+    """
+    import numpy as np
+
+    from repro.api import RunConfig, compile as api_compile
+    from repro.configs.base import ConvNetConfig
+    from repro.obs.export import validate_chrome_trace
+
+    out_dir = os.path.abspath(os.path.join("out", "serve"))
+    os.makedirs(out_dir, exist_ok=True)
+    cfg = ConvNetConfig(name="serve_tiny8", family="conv3d",
+                        arch="cosmoflow", input_width=8, in_channels=1,
+                        out_dim=4, conv_channels=(2, 4), fc_dims=(16, 8))
+    n_req = 64 if quick else 128
+    max_batch = 16
+    r = np.random.RandomState(0)
+    reqs = [r.randn(8, 8, 8, 1).astype(np.float32) for _ in range(n_req)]
+
+    sess = api_compile(RunConfig(model=cfg, mode="infer", global_batch=1))
+    # one long-lived harness across rounds, like a real server; the
+    # queue holds a full round so the producer never blocks mid-sweep
+    # and the worker drains saturated max_batch coalesces
+    h = sess.serve(max_batch=max_batch, max_wait_ms=5.0,
+                   max_queue=n_req)
+
+    def unbatched():
+        for q in reqs:
+            jax.block_until_ready(sess.predict(q[None]))
+
+    def batched():
+        for f in h.submit_many(reqs):
+            f.result(timeout=300)
+
+    calls = {"unbatched": unbatched, "batched": batched}
+    rounds = 5 if quick else 8
+    us = interleaved_trimmed(calls, rounds, trim="best", warmups=1)
+    un_us, b_us = us["unbatched"] / n_req, us["batched"] / n_req
+    lats = sorted(h.latencies_s())
+
+    def pq(q):
+        return lats[min(int(q * len(lats)), len(lats) - 1)] * 1e3
+
+    s = h.stats()
+    h.close()
+    sess.close()
+    emit("serve.unbatched.oracle", un_us,
+         f"requests={n_req};B=1;rounds={rounds}")
+    emit("serve.batched.harness", b_us,
+         f"requests={n_req};max_batch={max_batch};"
+         f"mean_fill={s['mean_fill']:.1f};"
+         f"throughput_ratio={un_us / b_us:.2f}x;target>=1.3x")
+    emit("serve.latency.quantiles", pq(0.50) * 1e3,
+         f"p50_ms={pq(0.50):.2f};p95_ms={pq(0.95):.2f};"
+         f"p99_ms={pq(0.99):.2f};samples={len(lats)}")
+
+    # 2. traced serve session -> validated Chrome artifact
+    trace = os.path.join(out_dir, "bench_serve_trace.json")
+    if os.path.exists(trace):
+        os.remove(trace)  # overwrite, don't uniquify, across runs
+    with api_compile(RunConfig(model=cfg, mode="infer",
+                               trace=trace)) as ts:
+        with ts.serve(max_batch=4, max_wait_ms=50.0) as th:
+            for f in th.submit_many(reqs[:8]):
+                f.result(timeout=300)
+        tele = ts.telemetry()
+    ok, problems = validate_chrome_trace(trace)
+    emit("serve.trace.valid", 0.0,
+         f"valid={ok};problems={len(problems)};"
+         f"batches={tele['serve.batches']:.0f};"
+         f"fill={tele['serve.batch_fill']:.1f}", trace_path=trace)
+
+    # 3. spatial sweep (subprocess: 8 forced host devices)
+    run_rows_subprocess(_SERVE_SPATIAL_SCRIPT.format(W=32 if quick else 64),
+                        emit, errname="serve", devices=8)
+
+
 BENCHES = {
     "fig4_strong_scaling": bench_fig4_strong_scaling,
     "fig7_unet_strong": bench_fig7_unet_strong,
@@ -1442,6 +1567,7 @@ BENCHES = {
     "io": bench_io,
     "pipeline": bench_pipeline,
     "obs": bench_obs,
+    "serve": bench_serve,
 }
 
 

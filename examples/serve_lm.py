@@ -17,7 +17,7 @@ from repro.configs.base import HybridConfig, SSMConfig
 from repro.data.synthetic import make_token_dataset
 from repro.models import ssm_lm, transformer
 from repro.optim.adam import Adam, warmup_cosine
-from repro.serve.serve import generate
+from repro.serve.lm import generate
 
 
 def main():

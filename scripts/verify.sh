@@ -4,6 +4,7 @@
 #   make verify            # or: bash scripts/verify.sh
 #   bash scripts/verify.sh pipeline         # just the §13 pipeline gate
 #   bash scripts/verify.sh obs              # just the §14 obs gate
+#   bash scripts/verify.sh serve            # just the §15 serving gate
 #   BENCH_OUT=BENCH_PR_N.json make verify   # also capture the bench rows
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -156,9 +157,99 @@ EOF
     python -m pytest -q tests/test_obs.py -x
 }
 
+serve_gate() {
+    echo "== serve gate =="
+    # DESIGN.md §15: (a) the batched serving harness must hold >=1.3x
+    # the unbatched oracle's throughput on the same requests (same
+    # interleaved trim=best timing as the bench, so one-sided load
+    # spikes on this box can't flake it), and (b) a traced serve
+    # session's exported Chrome trace must pass the schema checker and
+    # contain the four serve.* span names. Explicit exit, not assert
+    # (PYTHONOPTIMIZE-safe).
+    python - <<'EOF'
+import json
+import os
+import sys
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.api import RunConfig, compile as api_compile
+from repro.configs.base import ConvNetConfig
+from repro.obs.export import validate_chrome_trace
+from benchmarks.common import interleaved_trimmed
+
+cfg = ConvNetConfig(name="serve_gate8", family="conv3d", arch="cosmoflow",
+                    input_width=8, in_channels=1, out_dim=4,
+                    conv_channels=(2, 4), fc_dims=(16, 8))
+n_req, max_batch = 96, 16
+r = np.random.RandomState(0)
+reqs = [r.randn(8, 8, 8, 1).astype(np.float32) for _ in range(n_req)]
+sess = api_compile(RunConfig(model=cfg, mode="infer", global_batch=1))
+h = sess.serve(max_batch=max_batch, max_wait_ms=5.0, max_queue=n_req)
+
+
+def unbatched():
+    for q in reqs:
+        jax.block_until_ready(sess.predict(q[None]))
+
+
+def batched():
+    for f in h.submit_many(reqs):
+        f.result(timeout=300)
+
+
+us = interleaved_trimmed({"unbatched": unbatched, "batched": batched},
+                         rounds=8, trim="best", warmups=1)
+ratio = us["unbatched"] / us["batched"]
+stats = h.stats()
+h.close()
+sess.close()
+if stats["worker_failures"]:
+    sys.exit(f"serve gate: {stats['worker_failures']:.0f} worker failures")
+if ratio < 1.3:
+    sys.exit(f"serve gate: batched harness only {ratio:.2f}x the "
+             f"unbatched oracle ({us['batched'] / n_req:.0f}us vs "
+             f"{us['unbatched'] / n_req:.0f}us per request; target "
+             f">=1.3x at max_batch={max_batch})")
+print(f"serve gate: batched {ratio:.2f}x unbatched "
+      f"(fill {stats['mean_fill']:.1f}/{max_batch}; target >=1.3x)")
+
+trace_path = os.path.join(tempfile.mkdtemp(), "serve_trace.json")
+with api_compile(RunConfig(model=cfg, mode="infer",
+                           trace=trace_path)) as ts:
+    with ts.serve(max_batch=4, max_wait_ms=50.0) as th:
+        for f in th.submit_many(reqs[:8]):
+            f.result(timeout=300)
+ok, problems = validate_chrome_trace(trace_path)
+if not ok:
+    sys.exit("serve gate: exported serve trace failed schema check:\n  "
+             + "\n  ".join(problems))
+names = {e.get("name")
+         for e in json.load(open(trace_path))["traceEvents"]}
+missing = [s for s in ("serve.enqueue", "serve.batch", "serve.forward",
+                       "serve.reply") if s not in names]
+if missing:
+    sys.exit(f"serve gate: trace missing serve spans: {missing}")
+print(f"serve gate: exported serve trace valid ({trace_path})")
+print("serve gate OK")
+EOF
+
+    # checkpoint->inference parity + queue-semantics unit contracts
+    python -m pytest -q tests/test_serve.py -x \
+        -k "parity or cast_once or coalesces or backpressure or drain \
+            or fault or idempotent or trace"
+}
+
 if [ "${1:-}" = "pipeline" ]; then
     pipeline_gate
     echo "verify: OK (pipeline only)"
+    exit 0
+fi
+if [ "${1:-}" = "serve" ]; then
+    serve_gate
+    echo "verify: OK (serve only)"
     exit 0
 fi
 if [ "${1:-}" = "obs" ]; then
@@ -481,5 +572,7 @@ python -m pytest -q tests/test_io_pipeline.py -x \
 pipeline_gate
 
 obs_gate
+
+serve_gate
 
 echo "verify: OK"

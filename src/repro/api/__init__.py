@@ -19,6 +19,11 @@ For long campaigns, ``repro.api.supervisor.run(config, steps)`` wraps
 the Session in the §11 recovery loop: guarded steps, a step watchdog,
 atomic keep-last-K checkpoints, auto-resume from the newest valid one,
 and elastic re-planning when the device count shrinks.
+
+Serving (DESIGN.md §15): ``compile(RunConfig(mode="infer"))`` returns a
+forward-only ``repro.serve.InferenceSession`` instead — no optimizer
+state, donated inputs, restorable straight from training checkpoints —
+whose ``.serve()`` starts the batched request harness.
 """
 from repro.api import supervisor
 from repro.api.config import RunConfig, RunConfigError

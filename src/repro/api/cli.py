@@ -63,6 +63,29 @@ def add_session_args(ap) -> None:
                     help="append one JSON metrics row per step to PATH")
 
 
+def add_serve_args(ap) -> None:
+    """The batched-serving harness knobs (DESIGN.md §15), mapping
+    one-to-one onto ``InferenceSession.serve`` kwargs."""
+    ap.add_argument("--max-batch", type=int, default=8, metavar="B",
+                    help="coalesce up to B queued requests per forward")
+    ap.add_argument("--max-wait-ms", type=float, default=2.0,
+                    metavar="MS",
+                    help="max time a worker waits to fill a batch before "
+                         "running a partial one")
+    ap.add_argument("--max-queue", type=int, default=64, metavar="N",
+                    help="bounded request queue: submit() blocks "
+                         "(backpressure) once N requests are waiting")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="serving worker threads")
+
+
+def harness_kwargs(args) -> dict:
+    """Parsed ``add_serve_args`` flags -> ``InferenceSession.serve``
+    kwargs."""
+    return {"max_batch": args.max_batch, "max_wait_ms": args.max_wait_ms,
+            "max_queue": args.max_queue, "workers": args.workers}
+
+
 def config_from_args(base: RunConfig, args) -> RunConfig:
     """Apply parsed ``add_session_args`` flags over a preset config."""
     over = {"data": args.data, "spatial": args.model,

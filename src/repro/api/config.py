@@ -28,7 +28,25 @@ PRECISIONS = ("auto", "fp32", "bf16", "fp16")
 GRAD_COMMS = ("auto", "monolithic", "overlap", "reduce_scatter")
 PLAN_POLICIES = ("fixed", "auto")
 LR_SCHEDULES = ("constant", "linear_decay", "warmup_cosine")
+MODES = ("train", "infer")
 _MIN_LOCAL_WIDTH = 4  # the over-decomposition rule (DESIGN.md §5)
+
+
+def max_feasible_spatial(width: int, data: int,
+                         device_count: int) -> int:
+    """Largest spatial degree serving a ``width``-voxel volume can use
+    under the §5 over-decomposition rule with ``data``-way batch
+    parallelism on ``device_count`` devices (1 if none fits)."""
+    best = 1
+    s = 1
+    while True:
+        s *= 2
+        if width % s or width // s < _MIN_LOCAL_WIDTH:
+            break
+        if data * s > device_count:
+            break
+        best = s
+    return best
 
 
 class RunConfigError(ValueError):
@@ -60,6 +78,10 @@ class RunConfig:
 
     model: Union[str, ConvNetConfig]
     smoke: bool = False
+    # --- mode (DESIGN.md §15): "train" compiles the full training
+    # Session; "infer" compiles a forward-only InferenceSession (no
+    # optimizer state, inference precision policy, donated inputs).
+    mode: str = "train"
     global_batch: int = 4
     data: int = 1
     spatial: int = 1
@@ -87,8 +109,10 @@ class RunConfig:
     checkpoint_dir: Optional[str] = None
     save_every: Optional[int] = None  # steps between auto-saves
     keep_last: Optional[int] = None   # retention: stepped dirs + GC (§11)
-    # --- resilience (DESIGN.md §11) ---
-    guard: bool = True  # psum-agreed skip of non-finite steps
+    # --- resilience (DESIGN.md §11): psum-agreed skip of non-finite
+    # steps. None = auto (on for mode="train", off for forward-only
+    # inference, which produces no gradients to guard).
+    guard: Optional[bool] = None
     # --- data source: a HyperslabStore root, or None for synthetic ---
     data_dir: Optional[str] = None
     # --- input pipeline (DESIGN.md §12): prefetch queue depth for
@@ -106,6 +130,15 @@ class RunConfig:
     metrics_jsonl: Optional[str] = None
 
     # ------------------------------------------------------ resolution ----
+    @property
+    def resolved_guard(self) -> bool:
+        """The effective guard setting: explicit value, or the mode
+        default (train guards non-finite steps; a forward-only program
+        has no gradients to guard)."""
+        if self.guard is None:
+            return self.mode == "train"
+        return bool(self.guard)
+
     def resolve_model(self) -> ConvNetConfig:
         """The concrete ``ConvNetConfig`` this run trains (validated)."""
         if isinstance(self.model, ConvNetConfig):
@@ -137,6 +170,49 @@ class RunConfig:
         device count (tests can pin one instead)."""
         cfg = self.resolve_model()
 
+        if self.mode not in MODES:
+            raise RunConfigError("mode", f"unknown mode {self.mode!r}",
+                                 f"choices: {', '.join(MODES)}")
+        if self.guard is not None and not isinstance(self.guard, bool):
+            raise RunConfigError(
+                "guard", f"must be True, False or None (auto), got "
+                f"{self.guard!r}", "pass a bool or leave it None")
+        if self.mode == "infer":
+            # Forward-only programs have none of the training machinery;
+            # reject knobs that could silently change nothing (or worse,
+            # imply state that does not exist) with concrete fixes.
+            if self.grad_comm != "auto":
+                raise RunConfigError(
+                    "grad_comm",
+                    f"{self.grad_comm!r} configures gradient reduction, "
+                    "but mode='infer' compiles a forward-only program "
+                    "with no gradients",
+                    "drop grad_comm (leave it 'auto') for inference "
+                    "configs")
+            if self.pipeline != 1:
+                raise RunConfigError(
+                    "pipeline",
+                    f"pipeline={self.pipeline} schedules micro-batched "
+                    "fwd/bwd waves, but mode='infer' serves single "
+                    "forward calls",
+                    "set pipeline=1; use spatial= to shard large "
+                    "volumes instead")
+            if self.guard is True:
+                raise RunConfigError(
+                    "guard",
+                    "the non-finite step guard votes on gradients, "
+                    "which a forward-only program never produces",
+                    "drop guard (leave it None) for inference configs")
+            if self.save_every is not None or self.keep_last is not None:
+                bad = "save_every" if self.save_every is not None \
+                    else "keep_last"
+                raise RunConfigError(
+                    bad,
+                    "checkpoint WRITE policy set, but mode='infer' only "
+                    "ever reads checkpoints",
+                    f"drop {bad}; restore with "
+                    "InferenceSession.restore(checkpoint_dir)")
+
         for field in ("data", "spatial"):
             v = getattr(self, field)
             if not isinstance(v, int) or v < 1:
@@ -160,13 +236,16 @@ class RunConfig:
                     "spatial",
                     f"{self.spatial} does not divide {cfg.name}'s input "
                     f"width {w}",
-                    f"use a power-of-two divisor of {w}")
+                    self._spatial_fix(cfg, device_count,
+                                      f"use a power-of-two divisor of {w}"))
             if w // self.spatial < _MIN_LOCAL_WIDTH:
                 raise RunConfigError(
                     "spatial",
                     f"{self.spatial}-way decomposition of width {w} gives "
                     f"local width {w // self.spatial} < {_MIN_LOCAL_WIDTH}",
-                    f"reduce spatial to <= {w // _MIN_LOCAL_WIDTH}")
+                    self._spatial_fix(
+                        cfg, device_count,
+                        f"reduce spatial to <= {w // _MIN_LOCAL_WIDTH}"))
 
         if not isinstance(self.pipeline, int) or self.pipeline < 1:
             raise RunConfigError(
@@ -323,14 +402,34 @@ class RunConfig:
             import jax
             device_count = jax.device_count()
         if self.data * self.spatial > device_count:
+            hint = ("reduce the degrees, or force host devices with "
+                    "XLA_FLAGS=--xla_force_host_platform_device_count="
+                    f"{self.data * self.spatial}")
+            if self.mode == "infer":
+                hint = self._spatial_fix(cfg, device_count, hint)
             raise RunConfigError(
                 "data",
                 f"data x spatial = {self.data}x{self.spatial} = "
                 f"{self.data * self.spatial} devices, but only "
                 f"{device_count} visible",
-                "reduce the degrees, or force host devices with XLA_FLAGS="
-                f"--xla_force_host_platform_device_count="
-                f"{self.data * self.spatial}")
+                hint)
+
+    def _spatial_fix(self, cfg: ConvNetConfig,
+                     device_count: Optional[int], base: str) -> str:
+        """Append the max feasible spatial degree for this volume +
+        device count to a spatial-field fix string (infer mode only —
+        serving picks spatial for latency, so the ceiling is the useful
+        number)."""
+        if self.mode != "infer":
+            return base
+        if device_count is None:
+            import jax
+            device_count = jax.device_count()
+        best = max_feasible_spatial(cfg.input_width, self.data,
+                                    device_count)
+        return (f"{base} (max feasible spatial for width "
+                f"{cfg.input_width} at data={self.data} on "
+                f"{device_count} device(s): {best})")
 
     def _validate_plan_degrees(self, plan: "plan_lib.ParallelPlan") -> None:
         n_groups = plan.n_groups

@@ -21,6 +21,7 @@ import dataclasses
 import json
 import os
 import tempfile
+import threading
 import time
 from typing import Any, Dict, Optional, Tuple
 
@@ -230,9 +231,17 @@ def _resolve_plan(config: RunConfig, cfg: ConvNetConfig,
     return plan, explicit or "fp32"
 
 
-def compile(config: RunConfig) -> "Session":  # noqa: A001 - the API verb
+def compile(config: RunConfig):  # noqa: A001 - the API verb
     """Validate ``config``, resolve plan/precision/grad-comm, build the
-    mesh and optimizer state, and return a live ``Session``."""
+    mesh and optimizer state, and return a live ``Session`` — or, for
+    ``mode="infer"``, a forward-only ``InferenceSession`` (DESIGN.md
+    §15: no optimizer state, donated inputs, same plan-sharded
+    forward)."""
+    if config.mode == "infer":
+        # deferred: repro.serve.session imports this module
+        from repro.serve.session import compile_infer
+
+        return compile_infer(config)
     return _compile(config, abstract_state=False)
 
 
@@ -271,13 +280,13 @@ def _compile(config: RunConfig, *, abstract_state: bool) -> "Session":
         step_fn = train_step_lib.make_pipeline_train_step(
             cfg, meshes, optimizer, plan=plan,
             global_batch=config.global_batch, grad_comm=grad_comm,
-            precision=precision, guard=config.guard)
+            precision=precision, guard=config.resolved_guard)
     else:
         step_fn = train_step_lib.make_convnet_train_step(
             cfg, mesh, optimizer, global_batch=config.global_batch,
             use_pallas=config.use_pallas, overlap=config.overlap_halo,
             grad_comm=grad_comm, plan=plan, precision=precision,
-            guard=config.guard)
+            guard=config.resolved_guard)
     return Session(config, cfg, mesh, plan, precision, grad_comm,
                    optimizer, params, opt_state, step_fn, meshes=meshes)
 
@@ -317,6 +326,7 @@ class Session:
         # config.trace asks for it — otherwise every instrumentation
         # site stays on the near-free no-op path.
         self._closed = False
+        self._close_lock = threading.Lock()
         self.tracer = trace_lib.Tracer()
         self._metrics = metrics_lib.MetricsRegistry()
         self._trace_path = (config.trace if isinstance(config.trace, str)
@@ -356,7 +366,7 @@ class Session:
             if faults.fire("grads.nonfinite", step=self._t):
                 x = x * jnp.nan  # loss and every gradient go non-finite
             seed = jnp.asarray(self._t, jnp.int32)
-            if self.config.guard:
+            if self.config.resolved_guard:
                 self.params, self.opt_state, loss, applied = self._step_fn(
                     self.params, self.opt_state, x, y, seed)
                 self._guarded_steps += 1
@@ -390,7 +400,9 @@ class Session:
         """(loss, predictions) on an eval batch. CosmoFlow returns the
         regression MSE and per-sample predictions (sharded over the FC
         stage's batch axes); the U-Net returns the voxel cross-entropy
-        and ``None``."""
+        and the per-voxel logits in the plan's level-0 layout (the loss
+        ops mirror ``segmentation_loss`` exactly, so it stays bitwise
+        with the old fwd-probe path)."""
         gb = int(x.shape[0])
         key = ("eval", gb)
         fn = self._eval_fns.get(key)
@@ -401,28 +413,14 @@ class Session:
             # the whole model evaluates as plain data parallelism there
             params = reshard_lib.to_group(
                 params, jax.sharding.NamedSharding(self.mesh, P()))
-        if self.cfg.arch == "cosmoflow":
-            if fn is None:
-                fn = train_step_lib.make_convnet_eval_step(
-                    self.cfg, self.mesh, global_batch=gb, plan=self.plan,
-                    use_pallas=self.config.use_pallas,
-                    overlap=self.config.overlap_halo,
-                    precision=self.precision)
-                self._eval_fns[key] = fn
-            return fn(params, x, y)
         if fn is None:
-            fn = jax.jit(train_step_lib._build_convnet_step(
-                self.cfg, self.mesh, self.optimizer,
-                spatial_axes=("model", None, None), data_axes=("data",),
-                global_batch=gb, use_pallas=self.config.use_pallas,
-                overlap=self.config.overlap_halo, grad_comm=self.grad_comm,
-                stage="fwd", plan=self.plan, precision=self.precision))
+            fn = train_step_lib.make_convnet_eval_step(
+                self.cfg, self.mesh, global_batch=gb, plan=self.plan,
+                use_pallas=self.config.use_pallas,
+                overlap=self.config.overlap_halo,
+                precision=self.precision)
             self._eval_fns[key] = fn
-        # the fwd probe never touches opt state; a pipelined session's
-        # per-group tuple lives on other meshes, so pass none at all
-        opt_arg = None if self.plan.n_groups > 1 else self.opt_state
-        loss = fn(params, opt_arg, x, y, jnp.asarray(0, jnp.int32))
-        return loss, None
+        return fn(params, x, y)
 
     # --------------------------------------------------- introspection ----
     def telemetry(self) -> Dict[str, float]:
@@ -794,11 +792,14 @@ class Session:
         the §14 trace/metrics sinks: a configured trace path is
         exported, the JSONL sink is closed, and the tracer is
         deregistered so a successor session's spans never interleave
-        into this run's file. Idempotent — a second ``close`` (e.g.
-        ``with`` + supervisor both closing) is a no-op."""
-        if self._closed:
-            return
-        self._closed = True
+        into this run's file. Idempotent AND thread-safe — a second
+        ``close`` (``with`` + supervisor both closing, or a serve-side
+        thread racing the main one) is a no-op, and exactly one caller
+        performs the teardown."""
+        with self._close_lock:
+            if self._closed:
+                return
+            self._closed = True
         for ld in self._loaders:
             ld.close()
         self._loaders = []

@@ -312,7 +312,7 @@ def run(config: RunConfig, steps: int, *,
                                              - pending[0])
                     pending = None
                 skipped = (sess._guarded_steps - float(sess._applied_acc)
-                           if config.guard else 0.0)
+                           if config.resolved_guard else 0.0)
                 consec_bad = (consec_bad + 1
                               if skipped > prev_skipped
                               or not math.isfinite(loss) else 0)

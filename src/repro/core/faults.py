@@ -24,6 +24,10 @@ the exact same failure on every run:
 * ``comm.stall``        — a host-side sleep standing in for a hung
                           collective; the supervisor's step watchdog must
                           classify the over-long step as a failure.
+* ``serve.forward``     — a serving worker's batched forward dies
+                          mid-call (``serve/harness.py``; the failure
+                          must surface on that batch's futures — never
+                          as a hung queue).
 
 Sites are instrumented with ``faults.fire(site, ...)``: a no-op (and, by
 design, nearly free — one dict lookup) when nothing is armed, so the
@@ -47,7 +51,7 @@ import zlib
 from typing import Dict, List, Optional, Tuple
 
 SITES = ("loader.read", "grads.nonfinite", "checkpoint.write",
-         "device.loss", "comm.stall")
+         "device.loss", "comm.stall", "serve.forward")
 
 
 class InjectedFault(RuntimeError):
@@ -204,6 +208,10 @@ def fire(site: str, step: Optional[int] = None, **info) -> bool:
                          available=n)
     if site == "comm.stall":
         time.sleep(hit.spec.stall_s)
+    if site == "serve.forward":
+        # a serving worker's batched forward dies mid-call; the harness
+        # must surface it on THAT batch's futures, not hang the queue
+        raise InjectedFault(site, f"injected serving forward error{where}")
     return True  # comm.stall done; grads.nonfinite: caller poisons batch
 
 

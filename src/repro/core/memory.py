@@ -315,6 +315,55 @@ def _pipeline_peak_bytes(
     return best
 
 
+def infer_peak_bytes(
+    cfg: ConvNetConfig,
+    plan,
+    *,
+    global_batch: int,
+    precision: Union[str, "precision_lib.PrecisionPolicy", None] = None,
+) -> MemoryBreakdown:
+    """Predicted peak per-device bytes of one forward-only serving call
+    (DESIGN.md §15).
+
+    No reverse pass means nothing is saved for backward: buffers die at
+    their last use, so the transient peak is the largest single block's
+    working set (input + in-flight output copies) under the stage's
+    sharding — which is why per-device peak falls with spatial degree.
+    Params are resident in the serving dtype only (fp32 masters are
+    cast ONCE at load, so no master+copy pair coexists); there are no
+    gradients and no optimizer state. U-Net skip tensors are the one
+    resident term: encoder outputs parked until their decoder visit."""
+    pol = precision_lib.get(
+        precision if precision is not None
+        else getattr(plan, "precision", "fp32"))
+    act_bytes = pol.act_bytes
+    resident = 0.0   # unet encoder skips parked across the descent
+    working = 0.0    # largest in-flight block: input + output copies
+    entries = _plan_entries(cfg, plan)
+    depth = cfg.depth if cfg.arch == "unet" else 0
+    for idx, (l, st) in enumerate(entries):
+        vox_div, batch_div = _stage_divisors(plan, st)
+        b_local = global_batch / max(batch_div, 1)
+        if l is None:
+            last = perf_model.cosmoflow_layers(cfg)[-1]
+            w_out = last.width // last.stride // (2 if last.pooled else 1)
+            fc = w_out ** 3 * last.cout + 2 * sum(cfg.fc_dims)
+            working = max(working, fc * b_local * act_bytes)
+            continue
+        n_in = l.width ** 3 / vox_div
+        n_out = (l.width // l.stride) ** 3 / vox_div
+        block = (n_in * l.cin + _SAVED_PER_BLOCK * n_out * l.cout) \
+            * b_local * act_bytes
+        working = max(working, block)
+        if cfg.arch == "unet" and idx < 2 * depth and idx % 2 == 1:
+            resident += n_out * l.cout * b_local * act_bytes
+    n_params = cfg.param_count()
+    params = n_params * (act_bytes if pol.casts_params else 4)
+    return MemoryBreakdown(
+        params=int(params), param_copy=0, grads=0, opt_state=0,
+        activations=int(resident), workspace=int(working))
+
+
 def data_parallel_peak_bytes(
     cfg: ConvNetConfig,
     *,
@@ -449,6 +498,6 @@ def trace_peak_bytes(fn, *args, per_device: bool = True) -> int:
 
 
 __all__ = [
-    "MemoryBreakdown", "plan_peak_bytes", "data_parallel_peak_bytes",
-    "trace_peak_bytes",
+    "MemoryBreakdown", "plan_peak_bytes", "infer_peak_bytes",
+    "data_parallel_peak_bytes", "trace_peak_bytes",
 ]

@@ -1,0 +1,79 @@
+"""LM decode path: prefill a batch of prompts, then greedy/sampled
+decode with the (optionally sequence-sharded) KV cache.
+
+This is the sequence-model SIDE DOOR, kept for the substrate tests and
+``examples/serve_lm.py``. The serving subsystem for the paper's 3D CNN
+family — forward-only sessions, the batched request harness, obs
+integration — lives in ``repro.serve.session`` / ``repro.serve.harness``
+(DESIGN.md §15); new serving work goes there."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import HybridConfig, SSMConfig, TransformerConfig
+from repro.core.sharding import NO_POLICY, ShardingPolicy
+from repro.models import ssm_lm, transformer
+
+
+def _is_ssm(cfg) -> bool:
+    return isinstance(cfg, (SSMConfig, HybridConfig))
+
+
+def make_serve_fns(cfg, policy: ShardingPolicy = NO_POLICY, mesh=None):
+    mod = ssm_lm if _is_ssm(cfg) else transformer
+
+    def prefill_fn(params, tokens, max_len):
+        if _is_ssm(cfg):
+            # SSM prefill: run forward once per prompt building the state
+            # by replaying tokens through decode (simple, exact).
+            cache = mod.init_cache(cfg, tokens.shape[0], max_len,
+                                   jax.tree.leaves(params)[0].dtype)
+
+            def body(cache, tok):
+                logits, cache = mod.decode_step(params, cache, tok[:, None],
+                                                cfg, policy, mesh)
+                return cache, logits
+
+            cache, logits_seq = jax.lax.scan(
+                body, cache, jnp.moveaxis(tokens, 1, 0))
+            return logits_seq[-1], cache
+        return mod.prefill(params, tokens, cfg, policy, mesh,
+                           max_len=max_len)
+
+    def decode_fn(params, cache, tokens):
+        return mod.decode_step(params, cache, tokens, cfg, policy, mesh)
+
+    return prefill_fn, decode_fn
+
+
+def generate(
+    params: Any,
+    prompts: jax.Array,  # (B, S_prompt) int32
+    cfg,
+    num_steps: int,
+    policy: ShardingPolicy = NO_POLICY,
+    mesh=None,
+    temperature: float = 0.0,
+    rng: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Greedy (temperature=0) or sampled generation. Returns (B, num_steps)."""
+    B, S = prompts.shape
+    max_len = S + num_steps
+    prefill_fn, decode_fn = make_serve_fns(cfg, policy, mesh)
+    logits, cache = jax.jit(prefill_fn, static_argnums=(2,))(
+        params, prompts, max_len)
+    decode_jit = jax.jit(decode_fn)
+    out = []
+    tok = None
+    for i in range(num_steps):
+        if temperature > 0:
+            rng, sub = jax.random.split(rng)
+            tok = jax.random.categorical(sub, logits / temperature, axis=-1)
+        else:
+            tok = jnp.argmax(logits, axis=-1)
+        out.append(tok)
+        logits, cache = decode_jit(params, cache, tok[:, None])
+    return jnp.stack(out, axis=1)

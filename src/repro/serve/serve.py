@@ -1,73 +1,29 @@
-"""Batched serving driver: prefill a batch of prompts, then greedy/sampled
-decode with the (optionally sequence-sharded) KV cache."""
+"""DEPRECATED import location — the LM decode helpers moved to
+``repro.serve.lm``.
+
+``repro.serve`` is now the 3D-CNN serving subsystem (DESIGN.md §15):
+
+* ``repro.serve.session.InferenceSession`` — forward-only sessions
+  compiled from ``RunConfig(mode="infer")`` or restored straight from
+  training checkpoints.
+* ``repro.serve.harness.ServingHarness`` — the batched request queue
+  (coalescing, futures, backpressure).
+* ``repro.serve.lm`` — the sequence-model prefill/decode path that used
+  to live here.
+
+This shim re-exports the LM names with a ``DeprecationWarning`` so old
+imports keep working one release longer.
+"""
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+import warnings
 
-import jax
-import jax.numpy as jnp
+from repro.serve.lm import generate, make_serve_fns  # noqa: F401
 
-from repro.configs.base import HybridConfig, SSMConfig, TransformerConfig
-from repro.core.sharding import NO_POLICY, ShardingPolicy
-from repro.models import ssm_lm, transformer
+warnings.warn(
+    "repro.serve.serve moved to repro.serve.lm; the repro.serve package "
+    "now hosts the 3D-CNN serving subsystem (InferenceSession / "
+    "ServingHarness, DESIGN.md §15)",
+    DeprecationWarning, stacklevel=2)
 
-
-def _is_ssm(cfg) -> bool:
-    return isinstance(cfg, (SSMConfig, HybridConfig))
-
-
-def make_serve_fns(cfg, policy: ShardingPolicy = NO_POLICY, mesh=None):
-    mod = ssm_lm if _is_ssm(cfg) else transformer
-
-    def prefill_fn(params, tokens, max_len):
-        if _is_ssm(cfg):
-            # SSM prefill: run forward once per prompt building the state
-            # by replaying tokens through decode (simple, exact).
-            cache = mod.init_cache(cfg, tokens.shape[0], max_len,
-                                   jax.tree.leaves(params)[0].dtype)
-
-            def body(cache, tok):
-                logits, cache = mod.decode_step(params, cache, tok[:, None],
-                                                cfg, policy, mesh)
-                return cache, logits
-
-            cache, logits_seq = jax.lax.scan(
-                body, cache, jnp.moveaxis(tokens, 1, 0))
-            return logits_seq[-1], cache
-        return mod.prefill(params, tokens, cfg, policy, mesh,
-                           max_len=max_len)
-
-    def decode_fn(params, cache, tokens):
-        return mod.decode_step(params, cache, tokens, cfg, policy, mesh)
-
-    return prefill_fn, decode_fn
-
-
-def generate(
-    params: Any,
-    prompts: jax.Array,  # (B, S_prompt) int32
-    cfg,
-    num_steps: int,
-    policy: ShardingPolicy = NO_POLICY,
-    mesh=None,
-    temperature: float = 0.0,
-    rng: Optional[jax.Array] = None,
-) -> jax.Array:
-    """Greedy (temperature=0) or sampled generation. Returns (B, num_steps)."""
-    B, S = prompts.shape
-    max_len = S + num_steps
-    prefill_fn, decode_fn = make_serve_fns(cfg, policy, mesh)
-    logits, cache = jax.jit(prefill_fn, static_argnums=(2,))(
-        params, prompts, max_len)
-    decode_jit = jax.jit(decode_fn)
-    out = []
-    tok = None
-    for i in range(num_steps):
-        if temperature > 0:
-            rng, sub = jax.random.split(rng)
-            tok = jax.random.categorical(sub, logits / temperature, axis=-1)
-        else:
-            tok = jnp.argmax(logits, axis=-1)
-        out.append(tok)
-        logits, cache = decode_jit(params, cache, tok[:, None])
-    return jnp.stack(out, axis=1)
+__all__ = ["make_serve_fns", "generate"]

@@ -424,11 +424,15 @@ def make_convnet_eval_step(
     plan: Optional["plan_lib.ParallelPlan"] = None,
     precision=None,
 ):
-    """Returns eval(params, x, y) -> (loss, preds) (cosmoflow only).
+    """Returns eval(params, x, y) -> (loss, preds).
 
-    Under a plan whose CNN->FC transition repartitions the spatial group
-    into the batch, ``preds`` comes back sharded over the FC stage's batch
-    axes (each sample computed exactly once)."""
+    CosmoFlow: the regression MSE and per-sample predictions — under a
+    plan whose CNN->FC transition repartitions the spatial group into
+    the batch, ``preds`` comes back sharded over the FC stage's batch
+    axes (each sample computed exactly once). U-Net: the voxel
+    cross-entropy (same ops as ``segmentation_loss``, so the loss is
+    bitwise-equal to the fwd probe's) and the per-voxel logits in the
+    plan's level-0 layout."""
     plan = resolve_convnet_plan(cfg, mesh, spatial_axes=spatial_axes,
                                 data_axes=data_axes, plan=plan)
     entry = plan.stages[0]
@@ -439,23 +443,89 @@ def make_convnet_eval_step(
     fc_batch = plan.final_stage.batch_axes
 
     def local_eval(params, x, y):
-        pred = cosmoflow_lib.forward(
-            params, x, cfg, plan=plan, bn_axes=all_axes, train=False,
+        if cfg.arch == "cosmoflow":
+            pred = cosmoflow_lib.forward(
+                params, x, cfg, plan=plan, bn_axes=all_axes, train=False,
+                use_pallas=use_pallas, overlap=overlap, precision=precision)
+            y = reshard_lib.shard_batch(y, plan.batch_extension_axes)
+            per = jnp.mean(jnp.square(pred.astype(jnp.float32) - y),
+                           axis=-1)
+            loss = lax.psum(jnp.sum(per) / (global_batch * redundancy),
+                            all_axes)
+            return loss, pred
+        logits = unet_lib.forward(
+            params, x, cfg, plan=plan, bn_axes=all_axes,
             use_pallas=use_pallas, overlap=overlap, precision=precision)
-        y = reshard_lib.shard_batch(y, plan.batch_extension_axes)
-        per = jnp.mean(jnp.square(pred.astype(jnp.float32) - y), axis=-1)
-        loss = lax.psum(jnp.sum(per) / (global_batch * redundancy),
-                        all_axes)
-        return loss, pred
+        # exactly segmentation_loss's ops on the same logits, so the
+        # returned loss matches the fwd probe bitwise
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+        gv = global_batch * cfg.input_width ** 3
+        loss = lax.psum(jnp.sum(nll) / gv, all_axes)
+        return loss, logits
 
     dspec = data_axes if len(data_axes) > 1 else data_axes[0]
     fc_dspec = fc_batch if len(fc_batch) > 1 else fc_batch[0]
     x_spec = P(dspec, *spatial_axes, None)
+    if cfg.arch == "cosmoflow":
+        y_spec, pred_spec = P(dspec, None), P(fc_dspec, None)
+    else:
+        # labels and logits both live in the level-0 spatial layout
+        y_spec = P(dspec, *spatial_axes)
+        pred_spec = P(dspec, *spatial_axes, None)
     return jax.jit(compat.shard_map(
         local_eval, mesh=mesh,
-        in_specs=(P(), x_spec, P(dspec, None)),
-        out_specs=(P(), P(fc_dspec, None)),
+        in_specs=(P(), x_spec, y_spec),
+        out_specs=(P(), pred_spec),
     ))
+
+
+def make_convnet_forward_step(
+    cfg: ConvNetConfig,
+    mesh,
+    *,
+    spatial_axes: Tuple[Optional[str], ...] = ("model", None, None),
+    data_axes: Tuple[str, ...] = ("data",),
+    use_pallas: bool = False,
+    overlap: Optional[bool] = None,
+    plan: Optional["plan_lib.ParallelPlan"] = None,
+    precision=None,
+    donate: bool = True,
+):
+    """Returns fwd(params, x) -> preds: the serving forward (§15).
+
+    The same plan-sharded forward the eval step runs — overlapped-halo
+    conv (§3) and in-graph resharding (§5) included — but with no loss
+    term and, by default, the input batch donated: an inference step
+    keeps no activations alive past the call, so XLA may reuse the
+    request buffer as workspace. CosmoFlow returns (B, out_dim)
+    predictions (sharded over the FC stage's batch axes); the U-Net
+    returns per-voxel logits in the plan's level-0 layout."""
+    plan = resolve_convnet_plan(cfg, mesh, spatial_axes=spatial_axes,
+                                data_axes=data_axes, plan=plan)
+    entry = plan.stages[0]
+    spatial_axes = tuple(entry.spatial_axes)
+    data_axes = tuple(entry.batch_axes)
+    all_axes = plan.axis_names
+    fc_batch = plan.final_stage.batch_axes
+
+    def local_fwd(params, x):
+        if cfg.arch == "cosmoflow":
+            return cosmoflow_lib.forward(
+                params, x, cfg, plan=plan, bn_axes=all_axes, train=False,
+                use_pallas=use_pallas, overlap=overlap, precision=precision)
+        return unet_lib.forward(
+            params, x, cfg, plan=plan, bn_axes=all_axes,
+            use_pallas=use_pallas, overlap=overlap, precision=precision)
+
+    dspec = data_axes if len(data_axes) > 1 else data_axes[0]
+    fc_dspec = fc_batch if len(fc_batch) > 1 else fc_batch[0]
+    x_spec = P(dspec, *spatial_axes, None)
+    out_spec = (P(fc_dspec, None) if cfg.arch == "cosmoflow"
+                else P(dspec, *spatial_axes, None))
+    fn = compat.shard_map(local_fwd, mesh=mesh, in_specs=(P(), x_spec),
+                          out_specs=out_spec)
+    return jax.jit(fn, donate_argnums=(1,) if donate else ())
 
 
 # ------------------------------------------------- pipeline groups (§13) --

@@ -1,0 +1,460 @@
+"""Serving subsystem tests (DESIGN.md §15).
+
+Three pillars:
+
+* checkpoint -> inference parity: an ``InferenceSession`` restored from
+  a training checkpoint produces outputs bitwise-equal to the training
+  ``Session.evaluate`` on the same checkpoint — single-device, under
+  bf16 (masters cast once at load), for the U-Net's voxel logits, and
+  for the 2-data x 2-spatial ZeRO-1-sharded case (subprocess).
+* queue semantics: coalescing, backpressure, shutdown drains, a worker
+  fault surfaces as a failed future (never a hang).
+* config surface: ``mode="infer"`` FIELD-named rejections with concrete
+  fixes, the max-feasible-spatial suggestion, guard auto-resolution,
+  and the §15 forward-only memory model falling with spatial degree.
+"""
+import os
+import threading
+import time
+import warnings
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.api import RunConfig, RunConfigError, Session, compile
+from repro.api.config import max_feasible_spatial
+from repro.configs.base import ConvNetConfig
+from repro.core import faults
+from repro.serve import InferenceSession, ServingHarness, compile_infer
+
+TINY = ConvNetConfig(name="tiny8", family="conv3d", arch="cosmoflow",
+                     input_width=8, in_channels=1, out_dim=4,
+                     conv_channels=(2, 4), fc_dims=(16, 8))
+TINY_UNET = ConvNetConfig(name="tinyu8", family="conv3d", arch="unet3d",
+                          input_width=8, in_channels=1, out_dim=3,
+                          base_channels=2, depth=1)
+
+
+def _batch(cfg, n=4, seed=0):
+    r = np.random.RandomState(seed)
+    w = cfg.input_width
+    x = r.randn(n, w, w, w, cfg.in_channels).astype(np.float32)
+    if cfg.arch == "cosmoflow":
+        y = r.randn(n, cfg.out_dim).astype(np.float32)
+    else:
+        y = r.randint(0, cfg.out_dim, size=(n, w, w, w)).astype(np.int32)
+    return x, y
+
+
+# ------------------------------------------------------ config surface ----
+def test_infer_mode_rejects_training_knobs_with_field_names():
+    cases = [
+        (dict(grad_comm="reduce_scatter"), "grad_comm"),
+        (dict(pipeline=2), "pipeline"),
+        (dict(guard=True), "guard"),
+        (dict(save_every=5, checkpoint_dir="x"), "save_every"),
+        (dict(keep_last=2, checkpoint_dir="x"), "keep_last"),
+    ]
+    for kw, field in cases:
+        with pytest.raises(RunConfigError) as e:
+            RunConfig(model=TINY, mode="infer", **kw).validate(
+                device_count=8)
+        assert e.value.field == field, (kw, e.value.field)
+        assert e.value.fix  # every rejection names a concrete fix
+
+
+def test_unknown_mode_rejected():
+    with pytest.raises(RunConfigError) as e:
+        RunConfig(model=TINY, mode="serve").validate(device_count=1)
+    assert e.value.field == "mode"
+
+
+def test_infer_spatial_error_suggests_max_feasible_degree():
+    # width 8: spatial=4 gives local width 2 < 4 -> max feasible is 2
+    with pytest.raises(RunConfigError) as e:
+        RunConfig(model=TINY, mode="infer", spatial=4).validate(
+            device_count=8)
+    assert e.value.field == "spatial"
+    assert "max feasible spatial" in e.value.fix
+    assert ": 2)" in e.value.fix
+    # train mode keeps the plain fix (no serving suggestion)
+    with pytest.raises(RunConfigError) as e2:
+        RunConfig(model=TINY, spatial=4).validate(device_count=8)
+    assert "max feasible spatial" not in e2.value.fix
+
+
+def test_max_feasible_spatial_helper():
+    assert max_feasible_spatial(8, 1, 8) == 2    # local-width floor
+    assert max_feasible_spatial(512, 1, 8) == 8  # device-count ceiling
+    assert max_feasible_spatial(512, 2, 8) == 4  # data eats devices
+    assert max_feasible_spatial(7, 1, 8) == 1    # nothing divides
+
+
+def test_guard_auto_resolution():
+    assert RunConfig(model=TINY).resolved_guard is True
+    assert RunConfig(model=TINY, mode="infer").resolved_guard is False
+    assert RunConfig(model=TINY, guard=False).resolved_guard is False
+    # infer + explicit guard=False is fine (same as the auto default)
+    RunConfig(model=TINY, mode="infer", guard=False).validate(
+        device_count=1)
+
+
+def test_compile_dispatches_on_mode():
+    sess = compile(RunConfig(model=TINY, mode="infer", global_batch=2))
+    assert isinstance(sess, InferenceSession)
+    assert not hasattr(sess, "opt_state")  # forward-only: no optimizer
+    rep = sess.describe()
+    assert rep.modeled_peak.grads == 0 and rep.modeled_peak.opt_state == 0
+    sess.close()
+
+
+def test_compile_infer_rejects_train_mode():
+    with pytest.raises(RunConfigError) as e:
+        compile_infer(RunConfig(model=TINY))
+    assert e.value.field == "mode"
+
+
+def test_infer_peak_falls_with_spatial_degree():
+    from repro.core import memory as memory_lib
+    from repro.core import plan as plan_lib
+    from repro.core.spatial_conv import SpatialPartitioning
+
+    cfg = ConvNetConfig(name="cf512", family="conv3d", arch="cosmoflow",
+                        input_width=512, in_channels=4, out_dim=4)
+    peaks = []
+    for s in (1, 2, 4, 8):
+        plan = plan_lib.legacy_convnet_plan(
+            cfg, SpatialPartitioning(("model", None, None)), (s, 1, 1),
+            data_degrees=(1,))
+        peaks.append(memory_lib.infer_peak_bytes(
+            cfg, plan, global_batch=1).total)
+    assert peaks == sorted(peaks, reverse=True)
+    assert peaks[-1] < peaks[0] / 2  # sharding really cuts the peak
+    # and the forward-only peak undercuts the training peak at the
+    # same degrees (no grads/opt state/residuals)
+    plan1 = plan_lib.legacy_convnet_plan(
+        cfg, SpatialPartitioning(("model", None, None)), (1, 1, 1),
+        data_degrees=(1,))
+    train_peak = memory_lib.plan_peak_bytes(
+        cfg, plan1, global_batch=1).total
+    assert peaks[0] < train_peak
+
+
+# ------------------------------------------- checkpoint -> inference ----
+def test_checkpoint_inference_parity_cosmoflow(tmp_path):
+    ckpt = str(tmp_path / "ck")
+    x, y = _batch(TINY)
+    with compile(RunConfig(model=TINY, global_batch=4,
+                           checkpoint_dir=ckpt)) as tr:
+        tr.step(x, y)
+        tr.save()
+        ev_loss, ev_pred = tr.evaluate(x, y)
+    with InferenceSession.restore(ckpt) as inf:
+        pred = inf.predict(x)
+        il, ip = inf.evaluate(x, y)
+    assert jnp.array_equal(pred, ev_pred)          # bitwise
+    assert float(il) == float(ev_loss)
+    assert jnp.array_equal(ip, ev_pred)
+
+
+def test_checkpoint_inference_parity_unet_logits(tmp_path):
+    ckpt = str(tmp_path / "ck")
+    x, y = _batch(TINY_UNET)
+    with compile(RunConfig(model=TINY_UNET, global_batch=4,
+                           checkpoint_dir=ckpt)) as tr:
+        tr.step(x, y)
+        tr.save()
+        ev_loss, ev_logits = tr.evaluate(x, y)
+    assert ev_logits is not None  # evaluate now returns voxel logits
+    assert ev_logits.shape == (4, 8, 8, 8, TINY_UNET.out_dim)
+    with InferenceSession.restore(ckpt) as inf:
+        logits = inf.predict(x)
+        il, _ = inf.evaluate(x, y)
+    assert jnp.array_equal(logits, ev_logits)      # bitwise
+    assert float(il) == float(ev_loss)
+
+
+def test_bf16_masters_cast_once_at_load(tmp_path):
+    ckpt = str(tmp_path / "ck")
+    x, y = _batch(TINY)
+    with compile(RunConfig(model=TINY, global_batch=4, precision="bf16",
+                           checkpoint_dir=ckpt)) as tr:
+        tr.step(x, y)
+        tr.save()
+        ev_loss, ev_pred = tr.evaluate(x, y)
+    with InferenceSession.restore(ckpt) as inf:
+        # masters were cast ONCE at load: the resident tree is bf16
+        assert all(l.dtype == jnp.bfloat16
+                   for l in jax.tree.leaves(inf.params))
+        assert inf.precision == "bf16"
+        pred = inf.predict(x)
+        il, ip = inf.evaluate(x, y)
+    # ...and the pre-cast forward matches the master-casting training
+    # eval bitwise (cast of a cast is the identity)
+    assert jnp.array_equal(pred, ev_pred)
+    assert float(il) == float(ev_loss)
+
+
+def test_restore_strips_training_knobs(tmp_path):
+    ckpt = str(tmp_path / "ck")
+    with compile(RunConfig(model=TINY, global_batch=4, guard=True,
+                           grad_comm="monolithic", save_every=1,
+                           keep_last=2, checkpoint_dir=ckpt)) as tr:
+        x, y = _batch(TINY)
+        tr.step(x, y)  # save_every=1 writes step_1 under the root
+    inf = InferenceSession.restore(ckpt)  # retention-root restore path
+    assert inf.config.mode == "infer"
+    assert inf.config.save_every is None and inf.config.keep_last is None
+    assert inf.config.grad_comm == "auto"
+    assert inf.config.resolved_guard is False
+    inf.close()
+
+
+def test_predict_batch_must_divide_data_degree():
+    sess = compile(RunConfig(model=TINY, mode="infer", global_batch=2))
+    x, _ = _batch(TINY, n=3)
+    with pytest.raises(ValueError, match="data degree"):
+        # data degree 1 always divides; force the check via _forward_for
+        sess._forward_for(0)
+    sess.predict(x)  # any positive batch at data degree 1
+    sess.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        sess.predict(x)
+
+
+# ------------------------------------------------------ queue semantics ----
+def test_harness_coalesces_into_one_batch():
+    with compile(RunConfig(model=TINY, mode="infer")) as sess:
+        sess.predict(np.zeros((4, 8, 8, 8, 1), np.float32))  # warm jit
+        with sess.serve(max_batch=4, max_wait_ms=250.0) as h:
+            x, _ = _batch(TINY)
+            futs = h.submit_many(list(x))
+            rows = [f.result(timeout=60) for f in futs]
+            s = h.stats()
+        assert s["requests"] == 4
+        assert s["batches"] == 1, s     # one coalesced forward
+        assert s["mean_fill"] == 4.0
+        # same-composition parity: coalesced forward == direct forward
+        direct = sess.predict(x)
+        for i, r in enumerate(rows):
+            assert jnp.array_equal(r, direct[i])
+
+
+def test_harness_backpressure_blocks_submit():
+    with compile(RunConfig(model=TINY, mode="infer")) as sess:
+        slow = threading.Event()
+        real = sess._forward_for
+
+        def slow_forward(b):
+            fn = real(b)
+
+            def wrapped(params, x):
+                slow.wait(timeout=10)
+                return fn(params, x)
+            return wrapped
+
+        sess._forward_for = slow_forward
+        with sess.serve(max_batch=1, max_wait_ms=0.0, max_queue=2) as h:
+            x = np.zeros((8, 8, 8, 1), np.float32)
+            futs = [h.submit(x) for _ in range(3)]  # 1 in flight + 2 queued
+            t0 = time.perf_counter()
+            done = threading.Event()
+
+            def blocked_submit():
+                futs.append(h.submit(x))
+                done.set()
+
+            t = threading.Thread(target=blocked_submit, daemon=True)
+            t.start()
+            assert not done.wait(timeout=0.3)  # queue full: submit blocks
+            slow.set()                          # unblock the worker
+            assert done.wait(timeout=30)
+            assert time.perf_counter() - t0 >= 0.3
+            for f in futs:
+                f.result(timeout=60)
+
+
+def test_harness_shutdown_drains_queue():
+    with compile(RunConfig(model=TINY, mode="infer")) as sess:
+        h = sess.serve(max_batch=2, max_wait_ms=1.0, max_queue=32)
+        futs = [h.submit(np.zeros((8, 8, 8, 1), np.float32))
+                for _ in range(7)]
+        h.close(drain=True)
+        assert all(f.done() for f in futs)
+        for f in futs:
+            assert f.result().shape == (TINY.out_dim,)
+        with pytest.raises(RuntimeError, match="closed"):
+            h.submit(np.zeros((8, 8, 8, 1), np.float32))
+        h.close()  # idempotent
+
+
+def test_harness_close_without_drain_fails_pending():
+    with compile(RunConfig(model=TINY, mode="infer")) as sess:
+        slow = threading.Event()
+        real = sess._forward_for
+
+        def slow_forward(b):
+            fn = real(b)
+
+            def wrapped(params, x):
+                slow.wait(timeout=10)
+                return fn(params, x)
+            return wrapped
+
+        sess._forward_for = slow_forward
+        h = sess.serve(max_batch=1, max_wait_ms=0.0, max_queue=8)
+        futs = [h.submit(np.zeros((8, 8, 8, 1), np.float32))
+                for _ in range(4)]
+        slow.set()
+        h.close(drain=False)
+        assert all(f.done() for f in futs)
+        failed = [f for f in futs if f.exception() is not None]
+        for f in failed:
+            assert isinstance(f.exception(), RuntimeError)
+
+
+def test_worker_fault_surfaces_as_failed_future_not_hang():
+    with compile(RunConfig(model=TINY, mode="infer")) as sess:
+        sess.predict(np.zeros((1, 8, 8, 8, 1), np.float32))  # warm jit
+        with sess.serve(max_batch=1, max_wait_ms=0.0) as h:
+            with faults.active(faults.FaultSpec("serve.forward",
+                                                at_calls=(0,))):
+                bad = h.submit(np.zeros((8, 8, 8, 1), np.float32))
+                with pytest.raises(faults.InjectedFault):
+                    bad.result(timeout=60)
+                # the worker survived: the next request serves fine
+                good = h.submit(np.zeros((8, 8, 8, 1), np.float32))
+                assert good.result(timeout=60).shape == (TINY.out_dim,)
+        t = sess.telemetry()
+        assert t["serve.worker_failures"] == 1.0
+        assert t["serve.requests"] == 1.0
+
+
+def test_session_close_idempotent_across_threads():
+    sess = compile(RunConfig(model=TINY, mode="infer"))
+    h = sess.serve(max_batch=2, max_wait_ms=1.0)
+    h.submit(np.zeros((8, 8, 8, 1), np.float32)).result(timeout=60)
+    threads = [threading.Thread(target=sess.close) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+    assert sess._closed
+    # training Session.close is the same contract
+    tr = compile(RunConfig(model=TINY, global_batch=2))
+    threads = [threading.Thread(target=tr.close) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+    assert tr._closed
+
+
+# -------------------------------------------------------- observability ----
+def test_serve_trace_exports_and_validates(tmp_path):
+    from repro.obs import export as export_lib
+
+    path = str(tmp_path / "serve_trace.json")
+    with compile(RunConfig(model=TINY, mode="infer",
+                           trace=path)) as sess:
+        with sess.serve(max_batch=4, max_wait_ms=50.0) as h:
+            x, _ = _batch(TINY)
+            for f in h.submit_many(list(x)):
+                f.result(timeout=60)
+    ok, problems = export_lib.validate_chrome_trace(path)
+    assert ok, problems
+    import json
+    with open(path) as f:
+        events = json.load(f)["traceEvents"]
+    cats = {e.get("cat") for e in events}
+    names = {e.get("name") for e in events}
+    assert "serve" in cats
+    for span in ("serve.enqueue", "serve.batch", "serve.forward",
+                 "serve.reply"):
+        assert span in names, (span, sorted(names))
+
+
+def test_telemetry_serve_keys_route_through_registry():
+    with compile(RunConfig(model=TINY, mode="infer")) as sess:
+        with sess.serve(max_batch=2, max_wait_ms=1.0) as h:
+            x, _ = _batch(TINY, n=2)
+            for f in h.submit_many(list(x)):
+                f.result(timeout=60)
+        t = sess.telemetry()
+        for k in ("serve.requests", "serve.batches", "serve.batch_fill",
+                  "serve.queue_depth", "serve.worker_failures",
+                  "serve.latency_p50_ms", "serve.latency_p95_ms",
+                  "serve.latency_p99_ms"):
+            assert k in t, k
+        assert t["serve.requests"] == 2.0
+        assert t["serve.latency_p50_ms"] > 0.0
+        # the registry carries the same values (§14 one-surface contract)
+        snap = {g: sess._metrics.gauges()[g].value
+                for g in ("serve.requests", "serve.batches")}
+        assert snap["serve.requests"] == 2.0
+
+
+# -------------------------------------------------------------- LM shim ----
+def test_lm_serve_shim_deprecated():
+    import importlib
+    import repro.serve.serve as shim  # noqa: F401 - import fires the warning
+
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        importlib.reload(shim)
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    from repro.serve.lm import generate, make_serve_fns  # noqa: F401
+    assert shim.generate is generate
+
+
+# ------------------------------------------------------- multidevice ----
+ZERO1_SCRIPT = r"""
+import numpy as np, jax, jax.numpy as jnp, tempfile, os
+from repro.api import RunConfig, compile
+from repro.configs.base import ConvNetConfig
+from repro.serve import InferenceSession
+
+cfg = ConvNetConfig(name="tiny16", family="conv3d", arch="cosmoflow",
+                    input_width=16, in_channels=1, out_dim=4,
+                    conv_channels=(2, 4), fc_dims=(16, 8))
+ck = os.path.join(tempfile.mkdtemp(), "ck")
+r = np.random.RandomState(0)
+x = r.randn(4, 16, 16, 16, 1).astype(np.float32)
+y = r.randn(4, 4).astype(np.float32)
+with compile(RunConfig(model=cfg, global_batch=4, data=2, spatial=2,
+                       grad_comm="reduce_scatter",
+                       checkpoint_dir=ck)) as tr:
+    tr.step(x, y)
+    tr.save()
+    ev_loss, ev_pred = tr.evaluate(x, y)
+    ev_pred = np.asarray(ev_pred)
+
+# same degrees: the ZeRO-1 checkpoint's params subtree restores alone
+# (the sharded opt state on disk is never read) and serving is bitwise
+with InferenceSession.restore(ck) as inf:
+    assert dict(inf.mesh.shape) == {"data": 2, "model": 2}, inf.mesh.shape
+    pred = np.asarray(inf.predict(x))
+    il, _ = inf.evaluate(x, y)
+assert np.array_equal(pred, ev_pred), "2x2 serving != training eval"
+assert float(il) == float(ev_loss)
+print("PARITY_2x2_BITWISE")
+
+# re-degreed restore (2x2 checkpoint served on one device): numerically
+# equal within tolerance; BN psum reduction order makes cross-degree
+# results non-bitwise by design
+with InferenceSession.restore(ck, data=1, spatial=1) as inf1:
+    assert dict(inf1.mesh.shape) == {"data": 1, "model": 1}
+    pred1 = np.asarray(inf1.predict(x))
+diff = float(np.max(np.abs(pred1 - ev_pred)))
+assert diff < 1e-5, diff
+print("PARITY_REDEGREE_OK", diff)
+"""
+
+
+def test_zero1_sharded_checkpoint_serves_bitwise(multidevice):
+    out = multidevice(ZERO1_SCRIPT, devices=4)
+    assert "PARITY_2x2_BITWISE" in out
+    assert "PARITY_REDEGREE_OK" in out

@@ -156,7 +156,7 @@ def test_cosmoflow_flops_match_table1():
 
 
 def test_serve_generate_greedy():
-    from repro.serve.serve import generate
+    from repro.serve.lm import generate
     from repro.configs.base import TransformerConfig
     from repro.models import transformer as T
     cfg = TransformerConfig(name="t", family="dense", num_layers=2,
